@@ -1,0 +1,96 @@
+"""Shared benchmark harness: scheme sets, topology scales, CSV output.
+
+Every ``bench_*`` module maps to one paper table/figure (DESIGN.md §8) and
+registers a ``run(scale, out_dir)`` entry.  ``--full`` uses the paper-scale
+topologies (DF 1056 / SF 1134 endpoints) — slow on this 1-core container;
+the default reduced scale preserves scheme *orderings* (EXPERIMENTS.md
+reports which scale produced each number).
+"""
+from __future__ import annotations
+
+import csv
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.net.sim import build as B
+from repro.net.sim import engine as E
+from repro.net.sim.types import (ECMP, FLICR_W, MINIMAL, OPS_U, OPS_W,
+                                 SCHEME_NAMES, SCOUT, SPRAY_U, SPRAY_W,
+                                 UGAL_L, VALIANT)
+from repro.net.topology.dragonfly import make_dragonfly
+from repro.net.topology.slimfly import make_slimfly
+
+ALL_SCHEMES = [MINIMAL, VALIANT, UGAL_L, ECMP, FLICR_W, OPS_U, OPS_W,
+               SCOUT, SPRAY_U, SPRAY_W]
+ADAPTIVE_SCHEMES = [VALIANT, OPS_U, OPS_W, SCOUT, SPRAY_U, SPRAY_W]  # failures
+
+
+def topologies(scale: str):
+    if scale == "full":
+        return {"dragonfly": make_dragonfly(8, 4, 4),
+                "slimfly": make_slimfly(9)}
+    if scale == "mid":
+        return {"dragonfly": make_dragonfly(6, 3, 3),
+                "slimfly": make_slimfly(5, p=3)}
+    return {"dragonfly": make_dragonfly(4, 2, 2),
+            "slimfly": make_slimfly(5, p=2)}
+
+
+def fct_stats(res, mask=None, prefix=""):
+    sel = np.ones(len(res.fct_ticks), bool) if mask is None else mask
+    fct = B.ticks_to_us(res.fct_ticks[sel])
+    done = res.done[sel]
+    out = {
+        f"{prefix}done_frac": float(done.mean()),
+        f"{prefix}fct_mean_us": float(fct[done].mean()) if done.any() else -1,
+        f"{prefix}fct_p50_us": float(np.percentile(fct[done], 50)) if done.any() else -1,
+        f"{prefix}fct_p99_us": float(np.percentile(fct[done], 99)) if done.any() else -1,
+        f"{prefix}trims": int(res.trims[sel].sum()),
+        f"{prefix}timeouts": int(res.timeouts[sel].sum()),
+        f"{prefix}retx": int(res.retx[sel].sum()),
+        f"{prefix}ooo_pct": float(100 * res.ooo[sel].sum()
+                                  / max(res.delivered[sel].sum(), 1)),
+    }
+    return out
+
+
+def run_schemes(topo, flows, schemes, *, n_ticks, seed=0, stop_flows=None,
+                masks=None, spec_kw=None, chunk=2048, verbose=True):
+    rows = []
+    for scheme in schemes:
+        spec = B.build_spec(topo, flows, scheme, n_ticks=n_ticks, seed=seed,
+                            **(spec_kw or {}))
+        t0 = time.time()
+        res = E.run(spec, seed=seed, stop_flows=stop_flows, chunk=chunk)
+        row = {"topology": topo.name, "scheme": SCHEME_NAMES[scheme],
+               "wall_s": round(time.time() - t0, 1)}
+        if masks:
+            for name, m in masks.items():
+                row.update(fct_stats(res, m, prefix=f"{name}_"))
+        else:
+            row.update(fct_stats(res))
+        rows.append((row, res))
+        if verbose:
+            print("   ", {k: v for k, v in row.items()
+                          if not isinstance(v, float) or abs(v) < 1e7},
+                  flush=True)
+    return rows
+
+
+def write_csv(path: Path, rows: list[dict]):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    if not rows:
+        return
+    keys = sorted({k for r in rows for k in r})
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+
+
+def write_json(path: Path, obj):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(obj, indent=1))

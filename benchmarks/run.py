@@ -1,0 +1,105 @@
+"""Benchmark orchestrator: one function per paper table/figure + LM-side
+kernel microbenches.  Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick suite (~minutes)
+  PYTHONPATH=src python -m benchmarks.run --scale small   # all benches, reduced
+  PYTHONPATH=src python -m benchmarks.run --scale full    # paper-scale (slow)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+
+def _kernel_bench():
+    """us/call for the Pallas kernels' oracles (CPU; kernels themselves are
+    TPU-target and run in interpret mode — see tests)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ref
+
+    rows = []
+    rng = np.random.default_rng(0)
+    B, S, Hq, Hkv, D = 1, 512, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.mha_reference(q, k, v))
+    f(q, k, v).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        f(q, k, v).block_until_ready()
+    rows.append(("kernel_mha_ref_512", (time.perf_counter() - t0) / 5 * 1e6,
+                 f"B{B}xS{S}xH{Hq}"))
+
+    F, P = 1024, 64
+    w = jnp.asarray(rng.uniform(0.1, 3, (F, P)), jnp.float32)
+    u = jnp.asarray(rng.uniform(size=F), jnp.float32)
+    fr = jnp.asarray(rng.integers(-1, P, F), jnp.int32)
+    cnt = jnp.zeros(F, jnp.int32)
+    g = jax.jit(lambda *a: ref.spritz_select_reference(
+        *a, explore_threshold=44))
+    g(w, u, fr, cnt)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        g(w, u, fr, cnt)[0].block_until_ready()
+    rows.append(("kernel_spritz_select_1024", (time.perf_counter() - t0) / 20 * 1e6,
+                 f"F{F}xP{P}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="quick",
+                    choices=["quick", "small", "mid", "full"])
+    ap.add_argument("--only", default=None,
+                    help="comma list: motivational,micro,collectives,"
+                         "incast,trace,failures,memory,kernels")
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args()
+    out = Path(args.out)
+    quick = args.scale == "quick"
+    scale = "small" if quick else args.scale
+
+    from benchmarks import (bench_collectives, bench_fabric, bench_failures,
+                            bench_incast, bench_memory, bench_micro,
+                            bench_motivational, bench_trace)
+    suites = {
+        "memory": lambda: bench_memory.run(scale, out),
+        "motivational": lambda: bench_motivational.run(scale, out, quick=quick),
+        "micro": lambda: bench_micro.run(scale, out, quick=quick),
+        "collectives": lambda: bench_collectives.run(scale, out, quick=quick),
+        "incast": lambda: bench_incast.run(scale, out, quick=quick),
+        "trace": lambda: bench_trace.run(scale, out, quick=quick),
+        "failures": lambda: bench_failures.run(scale, out, quick=quick),
+        "fabric": lambda: bench_fabric.run(scale, out, quick=quick),
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    for name, us, derived in _kernel_bench():
+        if only is None or "kernels" in only:
+            print(f"{name},{us:.1f},{derived}")
+    for name, fn in suites.items():
+        if only is not None and name not in only:
+            continue
+        t0 = time.time()
+        rows = fn()
+        # emit one summary CSV line per (topology x scheme) mean FCT
+        for r in rows:
+            key_metric = next((r[k] for k in
+                               ("mon_fct_mean_us", "coll_duration_us",
+                                "by_fct_p99_us", "fct_p99_us", "fct_mean_us",
+                                "endpoint_table_KiB") if k in r and r[k] != -1),
+                              "")
+            print(f"bench_{name}_{r.get('topology','-')}_"
+                  f"{r.get('scheme', r.get('workload','-'))},"
+                  f"{key_metric},{r.get('trims', r.get('max_paths_per_pair',''))}",
+                  flush=True)
+        print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: the three layers of the framework in ~60 lines.
+
+  1. Spritz on a Dragonfly (the paper's contribution): run one adversarial
+     microbenchmark, Spritz-Spray vs minimal routing.
+  2. A reduced assigned architecture: one forward + one train step.
+  3. The fabric bridge: this arch's DP all-reduce on the full-size fabric.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+# ---------------------------------------------------------------- 1. Spritz
+from repro.net.sim import build as B
+from repro.net.sim import engine as E
+from repro.net.sim.types import MINIMAL, SPRAY_W, SCHEME_NAMES
+from repro.net.topology.dragonfly import make_dragonfly
+from repro.net.workloads import adversarial
+
+topo = make_dragonfly(4, 2, 2)  # 72-endpoint smoke-size Dragonfly
+print(f"[1] Dragonfly a=4 h=2 p=2: {topo.n_endpoints} endpoints, "
+      f"{topo.n_switches} switches, BDP={topo.bdp_packets()} pkts")
+
+flows = adversarial(topo, size_pkts=256)
+for scheme in (MINIMAL, SPRAY_W):
+    spec = B.build_spec(topo, flows, scheme, n_ticks=1 << 16)
+    res = E.run(spec)
+    fct = B.ticks_to_us(res.fct_ticks[res.done])
+    print(f"    {SCHEME_NAMES[scheme]:14s} mean FCT {fct.mean():8.1f} us   "
+          f"trims {res.trims.sum():5d}")
+
+# ----------------------------------------------------- 2. a reduced LM arch
+import jax
+from repro import configs as C
+from repro.models import lm
+from repro.train import optim
+from repro.train.step import make_train_step
+
+cfg = C.get_reduced("qwen2_5_32b")
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+toks = rng.integers(0, cfg.vocab, (2, 32))
+batch = {"tokens": toks, "labels": toks}
+logits, _ = lm.forward(params, cfg, batch["tokens"])
+print(f"[2] {cfg.name}: logits {logits.shape}")
+
+step = make_train_step(cfg, total=10, warmup=2)
+opt = optim.adamw_init(params)
+params, opt, metrics = step(params, opt, batch)
+print(f"    one train step: loss {float(metrics['loss']):.3f}")
+
+# ------------------------------------------------------- 3. fabric bridge
+from repro.fabric import bridge
+from repro.fabric.flowsim import FL_ECMP, FL_SPRITZ_W
+
+topo_full = make_dragonfly(8, 4, 4)  # paper scale: 1056 endpoints
+rep = bridge.fabric_report(topo_full, "train", shard_bytes=16e6,
+                           schemes=(FL_ECMP, FL_SPRITZ_W))
+print(f"[3] DP all-reduce (16 MB shards) on Dragonfly-1056:")
+for k, v in rep.items():
+    print(f"    {k:10s} collective time {v['fct_us']:8.1f} us")

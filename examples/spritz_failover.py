@@ -1,0 +1,37 @@
+"""Spritz failover demo (paper §V-D): disable 2% of links mid-run and watch
+Spritz-Spray route around them while ECMP-pinned flows stall into timeouts.
+
+Run:  PYTHONPATH=src python examples/spritz_failover.py
+"""
+import numpy as np
+
+from repro.net.sim import build as B
+from repro.net.sim import engine as E
+from repro.net.sim.types import ECMP, SPRAY_W, VALIANT, SCHEME_NAMES
+from repro.net.topology.slimfly import make_slimfly
+from repro.net.workloads import permutation
+
+topo = make_slimfly(5, p=2)
+print(f"Slim Fly MMS q=5: {topo.n_endpoints} endpoints, "
+      f"{topo.n_switches} switches, diameter {topo.diameter}")
+
+rng = np.random.default_rng(7)
+links = [(s, int(topo.nbr[s, r])) for s in range(topo.n_switches)
+         for r in range(topo.radix) if topo.nbr[s, r] >= 0]
+n_fail = max(2, len(links) // 50)  # ~2%
+failed = [links[i] for i in rng.choice(len(links), n_fail, replace=False)]
+print(f"failing {n_fail} links: {failed[:4]}{'...' if n_fail > 4 else ''}")
+
+flows = permutation(topo, size_pkts=256, seed=1)
+for scheme in (ECMP, VALIANT, SPRAY_W):
+    spec = B.build_spec(topo, flows, scheme, n_ticks=1 << 17,
+                        failed_links=failed)
+    res = E.run(spec)
+    fct = B.ticks_to_us(res.fct_ticks[res.done])
+    print(f"{SCHEME_NAMES[scheme]:14s} done {res.done.mean()*100:5.1f}%  "
+          f"mean FCT {fct.mean() if len(fct) else float('nan'):8.1f} us  "
+          f"timeouts {res.timeouts.sum():5d}  trims {res.trims.sum():5d}")
+
+print("\nSpritz blocks timed-out EVs (w_i=0 + block timer) and keeps only "
+      "verified-good paths in its cache; ECMP flows hash onto dead links "
+      "and can only retransmit into the void.")

@@ -1,0 +1,56 @@
+"""End-to-end training driver example (deliverable b): train a ~100M-param
+reduced MiniCPM (WSD schedule) for a few hundred steps with checkpointing,
+then kill-and-resume to demonstrate fault tolerance.
+
+Run:  PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax
+
+from repro import configs as C
+from repro.launch.train import train
+from repro.models import lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="minicpm_2b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = C.get_reduced(args.arch)
+    n_params = sum(x.size for x in jax.tree.leaves(
+        lm.init_params(jax.random.PRNGKey(0), cfg)))
+    print(f"arch {args.arch} (reduced): {n_params/1e6:.1f}M params, "
+          f"WSD schedule, batch {args.batch} x seq {args.seq}")
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_e2e_")
+    try:
+        # phase 1: train halfway, checkpointing every 50 steps
+        half = args.steps // 2
+        print(f"--- phase 1: steps 0..{half} ---")
+        _, _, losses1 = train(args.arch, steps=half, global_batch=args.batch,
+                              seq_len=args.seq, ckpt_dir=ckpt_dir,
+                              ckpt_every=50, log_every=25)
+
+        # phase 2: "restart after preemption" — resumes from checkpoint
+        print(f"--- phase 2 (restart): steps {half}..{args.steps} ---")
+        _, _, losses2 = train(args.arch, steps=args.steps,
+                              global_batch=args.batch, seq_len=args.seq,
+                              ckpt_dir=ckpt_dir, ckpt_every=100,
+                              log_every=25)
+        print(f"loss: start {losses1[0]:.3f} -> mid {losses1[-1]:.3f} "
+              f"-> end {losses2[-1]:.3f}")
+        assert losses2[-1] < losses1[0], "training did not reduce loss"
+        print("OK: loss decreased across a checkpoint/restart boundary")
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

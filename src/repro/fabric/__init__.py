@@ -1,0 +1,1 @@
+from repro.fabric import bridge, flowsim  # noqa: F401

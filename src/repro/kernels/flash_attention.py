@@ -1,0 +1,93 @@
+"""Flash attention (GQA, causal, optional sliding window) as a Pallas TPU
+kernel: online-softmax over K/V blocks with explicit BlockSpec VMEM tiling.
+
+Grid: (B * Hq, Sq / block_q).  Each program owns one q block in VMEM and
+streams K/V blocks of its kv-head (Hq = G * Hkv -> kv index = head // G)
+with ``pl.ds`` slices.  MXU alignment: block_q and block_k are multiples of
+128 at production shapes; d_head is 64/128 across the assigned archs.
+
+Validated against ``ref.mha_reference`` in interpret mode (CPU container);
+on TPU it replaces ``repro.models.common.chunked_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k, causal,
+                  sliding_window, q_offset, seq_k):
+    bq, d = q_ref.shape[1], q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+    qpos = q_offset + pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, block_k), 0)
+
+    nk = seq_k // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        kpos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, block_k), 1)
+        mask = jnp.ones((bq, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if sliding_window:
+            mask &= kpos > qpos - sliding_window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sliding_window",
+                                             "q_offset", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, sliding_window: int = 0,
+                    q_offset: int = 0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: [B, Sq, Hq, D]; k, v: [B, Sk, Hkv, D] -> [B, Sq, Hq, D]."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+
+    grid = (B * Hq, Sq // block_q)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=1.0 / (D ** 0.5),
+                          block_k=block_k, causal=causal,
+                          sliding_window=sliding_window, q_offset=q_offset,
+                          seq_k=Sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, Sk, D), lambda i, j, G=G: (i // G, 0, 0)),
+            pl.BlockSpec((1, Sk, D), lambda i, j, G=G: (i // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,97 @@
+"""RED/ECN enqueue stage as a Pallas TPU kernel.
+
+The packet simulator's per-tick enqueue (engine.py section E) is its
+hottest dense stage: for every packet slot, given the target port, the
+FIFO rank among same-tick arrivals, and the port's service tail, compute
+
+    occupancy  = max(tail[port] - t, 0) + rank
+    trim       = enqueue & (occupancy >= qsize)
+    mark_prob  = clip((occupancy - kmin) / (kmax - kmin), 0, 1)
+    mark       = accept & (uniform < mark_prob)
+    slot       = max(tail[port], t) + rank + 1
+
+On TPU this is a VMEM-tiled elementwise pass over the packet table with a
+gather from the (small, VMEM-resident) per-port tail vector — exactly the
+layout the engine's `lax.scan` body wants.  Oracle: ``ref.red_ecn_reference``.
+
+Grid: packet table tiled in blocks of ``block_n``; the port-tail vector is
+replicated into VMEM for each block (ports << packets).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _red_ecn_kernel(eport_ref, rank_ref, enq_ref, unif_ref, tail_ref, t_ref,
+                    occ_ref, trim_ref, mark_ref, slot_ref,
+                    *, qsize, kmin, kmax, n_ports):
+    eport = eport_ref[...]
+    rank = rank_ref[...]
+    enq = enq_ref[...]
+    unif = unif_ref[...]
+    tails = tail_ref[...]                      # [n_ports]
+    t = t_ref[0]
+
+    port_c = jnp.minimum(eport, n_ports - 1)
+    tail = tails[port_c]
+    occ = jnp.maximum(tail - t, 0) + rank
+    trim = enq & (occ >= qsize)
+    accept = enq & ~trim
+    pr = jnp.clip((occ.astype(jnp.float32) - kmin) /
+                  max(kmax - kmin, 1e-9), 0.0, 1.0)
+    mark = accept & (unif < pr)
+    slot = jnp.maximum(tail, t) + rank + 1
+
+    occ_ref[...] = occ
+    trim_ref[...] = trim
+    mark_ref[...] = mark
+    slot_ref[...] = jnp.where(accept, slot, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("qsize", "kmin", "kmax",
+                                             "n_ports", "block_n",
+                                             "interpret"))
+def red_ecn(eport, rank, enq, unif, q_tail, t, *, qsize: int, kmin: float,
+            kmax: float, n_ports: int, block_n: int = 512,
+            interpret: bool = True):
+    """eport/rank: [N] i32; enq: [N] bool; unif: [N] f32; q_tail: [P] i32.
+
+    Returns (occ [N] i32, trim [N] bool, mark [N] bool, slot [N] i32)."""
+    N = eport.shape[0]
+    block_n = min(block_n, N)
+    assert N % block_n == 0, (N, block_n)
+    grid = (N // block_n,)
+
+    kern = functools.partial(_red_ecn_kernel, qsize=qsize,
+                             kmin=kmin, kmax=kmax, n_ports=n_ports)
+    t_arr = jnp.asarray(t, jnp.int32).reshape(1)
+    occ, trim, mark, slot = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((n_ports,), lambda i: (0,)),   # tails: replicated
+            pl.BlockSpec((1,), lambda i: (0,)),         # tick scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N,), jnp.bool_),
+            jax.ShapeDtypeStruct((N,), jnp.bool_),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(eport, rank, enq, unif, q_tail, t_arr)
+    return occ, trim, mark, slot

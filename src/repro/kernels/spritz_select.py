@@ -1,0 +1,80 @@
+"""Spritz send-logic hot loop as a Pallas TPU kernel.
+
+Per packet tick, every active flow runs Algorithm 1: weighted sampling over
+its path-weight row (cumulative sum + threshold search) fused with the
+explore-counter and buffer-front selection.  At datacenter scale this runs
+per endpoint per ~80 ns packet slot, so the simulator treats it as its
+perf-critical inner kernel (the analogue of the paper's NIC/host datapath).
+
+Tiling: flows x paths rows live in VMEM blocks of (block_f, P); the weighted
+choice is a row cumsum + compare-reduce — VPU-friendly, no MXU needed.
+Validated against ``ref.spritz_select_reference`` (also used by the pure-jnp
+simulator path) in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _select_kernel(w_ref, u_ref, front_ref, count_ref, ev_ref, newcnt_ref,
+                   used_buf_ref, *, explore_threshold):
+    w = w_ref[...].astype(jnp.float32)            # [bf, P]
+    csum = jnp.cumsum(w, axis=1)
+    total = csum[:, -1:]
+    u = u_ref[...] * jnp.maximum(total[:, 0], 1e-30)
+    sampled = jnp.sum((csum < u[:, None]).astype(jnp.int32), axis=1)
+    sampled = jnp.minimum(sampled, w.shape[1] - 1)
+
+    count = count_ref[...]
+    front = front_ref[...]
+    explore = count >= explore_threshold
+    use_buffer = (~explore) & (front >= 0)
+    ev_ref[...] = jnp.where(use_buffer, front, sampled)
+    newcnt_ref[...] = jnp.where(explore, 0, count + 1)
+    used_buf_ref[...] = use_buffer
+
+
+@functools.partial(jax.jit, static_argnames=("explore_threshold", "block_f",
+                                             "interpret"))
+def spritz_select(w, u, buf_front, packet_count, *, explore_threshold: int,
+                  block_f: int = 256, interpret: bool = True):
+    """Batched Algorithm-1 path choice.
+
+    w: [F, P] effective weights; u: [F] uniforms; buf_front: [F] (-1 empty);
+    packet_count: [F].  Returns (ev [F], new_count [F], used_buffer [F]).
+    """
+    F, P = w.shape
+    block_f = min(block_f, F)
+    padF = (F + block_f - 1) // block_f * block_f
+    if padF != F:
+        w = jnp.pad(w, ((0, padF - F), (0, 0)))
+        u = jnp.pad(u, (0, padF - F))
+        buf_front = jnp.pad(buf_front, (0, padF - F), constant_values=-1)
+        packet_count = jnp.pad(packet_count, (0, padF - F))
+    grid = (padF // block_f,)
+    ev, newcnt, used = pl.pallas_call(
+        functools.partial(_select_kernel, explore_threshold=explore_threshold),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_f, P), lambda i: (i, 0)),
+            pl.BlockSpec((block_f,), lambda i: (i,)),
+            pl.BlockSpec((block_f,), lambda i: (i,)),
+            pl.BlockSpec((block_f,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_f,), lambda i: (i,)),
+            pl.BlockSpec((block_f,), lambda i: (i,)),
+            pl.BlockSpec((block_f,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padF,), jnp.int32),
+            jax.ShapeDtypeStruct((padF,), jnp.int32),
+            jax.ShapeDtypeStruct((padF,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(w, u, buf_front, packet_count)
+    return ev[:F], newcnt[:F], used[:F]

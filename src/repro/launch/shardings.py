@@ -1,0 +1,160 @@
+"""Sharding rules: parameter specs, batch specs, cache specs.
+
+TP over 'model' (heads / ffn / vocab), DP over ('pod','data'); MoE experts
+go over 'model' when the expert count divides it (expert parallelism, the
+all-to-all traffic of the paper's Alltoall benchmark), else TP-within-expert.
+Long-context decode shards the KV sequence axis over ('data','model') — the
+SP path that makes the 500k cells fit.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelCfg
+
+# (regex on '/'-joined path, spec) — first match wins.
+def _param_rules(cfg: ModelCfg, n_model: int):
+    moe_ep = cfg.moe is not None and cfg.moe.n_experts % max(n_model, 1) == 0
+    e_axis = "model" if moe_ep else None
+    f_axis = None if moe_ep else "model"
+    return [
+        (r"embed$", P("model", None)),
+        (r"out$", P(None, "model")),
+        (r"attn/w[qkv]$", P(None, "model")),
+        (r"attn/wo$", P("model", None)),
+        (r"attn/b[qkv]$", P("model")),
+        (r"xattn/w[qkv]$", P(None, "model")),
+        (r"xattn/wo$", P("model", None)),
+        (r"mlp/w_(gate|up)$", P(None, "model")),
+        (r"mlp/w_down$", P("model", None)),
+        (r"moe/router$", P(None, None)),
+        (r"moe/w_(gate|up)$", P(e_axis, None, f_axis)),
+        (r"moe/w_down$", P(e_axis, f_axis, None)),
+        (r"moe/shared/w_(gate|up)$", P(None, "model")),
+        (r"moe/shared/w_down$", P("model", None)),
+        (r"mamba/in_proj$", P(None, "model")),
+        (r"mamba/conv_w$", P(None, "model")),
+        (r"mamba/x_proj$", P("model", None)),
+        (r"mamba/(dt_bias|D)$", P("model")),
+        (r"mamba/A_log$", P("model", None)),
+        (r"mamba/out_proj$", P("model", None)),
+        (r"tmix/t_mix$", P(None, "model")),
+        (r"tmix/w[rkvg]$", P(None, "model")),
+        (r"tmix/ww$", P(None, None)),
+        (r"tmix/ww2$", P(None, "model")),
+        (r"tmix/(w_bias|u)$", P("model")),
+        (r"tmix/wo$", P("model", None)),
+        (r"cmix/t_mix$", P(None, "model")),
+        (r"cmix/wk$", P(None, "model")),
+        (r"cmix/wv$", P("model", None)),
+        (r"ln", P(None)),
+        (r".*", P(None)),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelCfg, params_shape, mesh, *, fsdp: bool = False,
+                fsdp_min_elems: int = 1 << 22):
+    """PartitionSpec pytree for a params (or eval_shape) tree.
+
+    Stacked block leaves have a leading unit axis -> specs gain a leading
+    None.  Falls back to replication when the named dim doesn't divide.
+
+    ``fsdp=True`` (ZeRO-3 style) additionally shards every large leaf's
+    biggest still-replicated dim over the data axes — without it, a 398B
+    jamba replicates 46 GiB params + 184 GiB optimizer per device across
+    the dp=16 axis (EXPERIMENTS.md §HBM-fit).  GSPMD inserts the standard
+    ZeRO all-gather/reduce-scatter traffic automatically."""
+    n_model = mesh.shape.get("model", 1)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    rules = _param_rules(cfg, n_model)
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith("blocks") or ps.startswith("enc_blocks")
+        base = None
+        for pat, spec in rules:
+            if re.search(pat, ps):
+                base = spec
+                break
+        dims = list(base) + [None] * 8
+        ndim = len(leaf.shape)
+        off = 1 if stacked else 0
+        out = [None] * ndim
+        for i in range(ndim - off):
+            out[i + off] = dims[i]
+        # divisibility guard: replicate dims that don't divide
+        for i, ax in enumerate(out):
+            if ax is None:
+                continue
+            size = mesh.shape.get(ax, 1) if isinstance(ax, str) else int(
+                np.prod([mesh.shape[a] for a in ax]))
+            if leaf.shape[i] % size != 0:
+                out[i] = None
+        if fsdp and dp and int(np.prod(leaf.shape)) >= fsdp_min_elems:
+            # biggest replicated dim divisible by the dp extent
+            cands = [(leaf.shape[i], i) for i in range(ndim)
+                     if out[i] is None and leaf.shape[i] % dp_size == 0]
+            if cands:
+                _, i = max(cands)
+                out[i] = dp if len(dp) > 1 else dp[0]
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def batch_specs(cfg: ModelCfg, mesh, *, batch: int, kind: str):
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    b_ax = dp if batch % dp_size == 0 else None
+    spec = {"tokens": P(b_ax, None)}
+    if kind == "train":
+        spec["labels"] = P(b_ax, None)
+    if cfg.family == "vlm":
+        spec["prefix_embed"] = P(b_ax, None, None)
+    if cfg.family == "encdec":
+        spec["enc_frames"] = P(b_ax, None, None)
+    return spec
+
+
+def cache_specs(cfg: ModelCfg, mesh, *, batch: int, max_len: int):
+    """KV cache: batch over data when divisible, sequence over 'model'
+    (and over 'data' too for batch=1 long-context)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    n_model = mesh.shape.get("model", 1)
+    if batch % dp_size == 0:
+        b_ax, s_ax = dp, "model"
+    else:
+        b_ax, s_ax = None, (*dp, "model") if max_len % (dp_size * n_model) == 0 else "model"
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        if ps.endswith("/k") or ps.endswith("/v"):
+            return P(None, b_ax, s_ax, None, None)
+        if "mamba" in ps or "shift" in ps or "wkv" in ps:
+            # [units, B, ...feature dims]: shard feature dim over model
+            out = [None, b_ax] + [None] * (nd - 2)
+            if nd >= 3:
+                out[2] = "model" if leaf.shape[2] % n_model == 0 else None
+            return P(*out)
+        return P(*([None] * nd))
+
+    return spec_for

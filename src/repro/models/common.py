@@ -1,0 +1,312 @@
+"""Shared model substrate: configs, norms, RoPE, GQA attention, MLPs.
+
+Functional style: parameters are pytrees of jnp arrays created by ``init_*``
+functions; ``apply`` functions are pure.  All layer stacks are scanned
+(stacked parameters + ``jax.lax.scan``) to keep HLO size and compile time
+bounded at 40-90 layer depths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    every: int = 1          # MoE layer every `every` layers (jamba: 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    family: str             # dense | moe | vlm | hybrid | encdec | rwkv
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    qkv_bias: bool = False
+    sliding_window: int = 0           # 0 = full attention
+    rope_theta: float = 1e4
+    moe: Optional[MoECfg] = None
+    # hybrid (jamba): 1 attention layer per `attn_every` layers, rest Mamba
+    attn_every: int = 0
+    d_state: int = 16                 # mamba state
+    # encdec (whisper)
+    n_enc_layers: int = 0
+    # vlm (llava)
+    n_patches: int = 0
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    # TP head alignment (models/tp_align.py): when set, n_heads/n_kv are the
+    # PADDED counts and head_maps = (q_src, kv_src, orig_heads, orig_kv)
+    # records how padded weights derive from the exact config's init.
+    head_maps: Any = None
+
+    @property
+    def d_qkv(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to 256 (Megatron-style) so embeddings/logits shard
+        cleanly over the 'model' axis; padded ids are masked in the loss."""
+        return (self.vocab + 255) // 256 * 256
+
+    def param_count(self) -> float:
+        """Approximate parameter count (for 6ND model-FLOPs)."""
+        d, L = self.d_model, self.n_layers
+        attn = d * self.d_qkv + 2 * d * self.n_kv * self.d_head + self.d_qkv * d
+        if self.family == "rwkv":
+            attn = 4 * d * d  # r,k,v,o (+ small lora/decay params)
+        if self.moe is not None:
+            me = self.moe
+            ff_moe = 3 * d * me.d_ff_expert * me.n_experts + 3 * d * me.d_ff_expert * me.n_shared
+            ff_dense = 3 * d * self.d_ff
+            n_moe = L // max(me.every, 1)
+            ff = n_moe * ff_moe + (L - n_moe) * ff_dense
+        else:
+            ff = L * 3 * d * self.d_ff
+        n_attn_layers = L if self.attn_every == 0 else L // self.attn_every
+        mamba = 0
+        if self.attn_every:
+            d_in = 2 * d
+            mamba = (L - n_attn_layers) * (2 * d * d_in + d_in * d + d_in * (2 * self.d_state + 1))
+        emb = self.vocab * d * 2  # in + out
+        enc = self.n_enc_layers * (4 * d * d + 3 * d * self.d_ff)
+        return float(n_attn_layers * attn + ff + mamba + emb + enc)
+
+    def active_param_count(self) -> float:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        me = self.moe
+        d, L = self.d_model, self.n_layers
+        full = self.param_count()
+        n_moe = L // max(me.every, 1)
+        all_routed = n_moe * 3 * d * me.d_ff_expert * me.n_experts
+        active_routed = n_moe * 3 * d * me.d_ff_expert * me.top_k
+        return float(full - all_routed + active_routed)
+
+
+# ------------------------------------------------------- sharding context
+# The launcher/dry-run sets this before tracing so model code can place
+# with_sharding_constraint hints (attention core + MoE dispatch).  Unset
+# (None) => no-op, so CPU smoke tests never touch device state.
+_SHARD_CTX: dict | None = None
+
+
+def set_shard_ctx(dp_axes=None, tp_axis="model", mesh=None):
+    global _SHARD_CTX
+    if dp_axes is None and mesh is None:
+        _SHARD_CTX = None
+    else:
+        _SHARD_CTX = {"dp": tuple(dp_axes or ()), "tp": tp_axis, "mesh": mesh}
+
+
+def shard_hint(x, *dims):
+    """with_sharding_constraint(x, P(*dims)) if a shard ctx is active.
+
+    dims use the symbolic names 'dp' / 'tp' which resolve via the ctx."""
+    if _SHARD_CTX is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    resolved = tuple(
+        _SHARD_CTX["dp"] if d == "dp" else _SHARD_CTX["tp"] if d == "tp" else d
+        for d in dims)
+    sh = NamedSharding(_SHARD_CTX["mesh"], P(*resolved))
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def attn_shard_mode(cfg: "ModelCfg") -> str:
+    """'head' (classic TP), 'head_q' (q-heads TP, kv replicated) or 'seq'
+    (context parallelism) depending on divisibility by the tp axis size."""
+    if _SHARD_CTX is None:
+        return "none"
+    tp = _SHARD_CTX["mesh"].shape.get(_SHARD_CTX["tp"], 1)
+    if cfg.n_heads % tp == 0 and cfg.n_kv % tp == 0:
+        return "head"
+    if cfg.n_heads % tp == 0:
+        return "head_q"
+    return "seq"
+
+
+# ------------------------------------------------------------------ layers
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale.astype(x.dtype)
+
+
+def init_rope(d_head: int, max_seq: int, theta: float = 1e4):
+    inv = 1.0 / (theta ** (np.arange(0, d_head, 2) / d_head))
+    t = np.arange(max_seq)
+    freqs = np.outer(t, inv)
+    return jnp.asarray(np.cos(freqs), jnp.float32), jnp.asarray(np.sin(freqs), jnp.float32)
+
+
+def apply_rope(x, cos, sin, positions):
+    # x: [B, S, H, Dh]; cos/sin: [maxS, Dh/2]; positions: [B, S]
+    c = cos[positions][:, :, None, :].astype(x.dtype)
+    s = sin[positions][:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset, block_q: int = 512,
+                      sliding_window: int = 0):
+    """Memory-bounded GQA attention: scan over query blocks against full K/V.
+
+    q: [B, Sq, Hq, Dh]; k,v: [B, Sk, Hkv, Dh].  Hq = G * Hkv.
+    ``q_offset`` is the absolute position of q[0] (decode: Sk - Sq).
+    This is the pure-jnp reference path; the Pallas flash kernel
+    (repro.kernels.flash_attention) is a drop-in replacement on TPU.
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    qb = q.reshape(B, Sq, Hkv, G, Dh)
+    nb = max(1, (Sq + block_q - 1) // block_q)
+    pad = nb * block_q - Sq
+    if pad:
+        qb = jnp.pad(qb, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qb = qb.reshape(B, nb, block_q, Hkv, G, Dh).transpose(1, 0, 3, 4, 2, 5)
+    # qb: [nb, B, Hkv, G, bq, Dh]
+
+    kpos = jnp.arange(Sk)
+
+    def one_block(i, qblk):
+        # qblk: [B, Hkv, G, bq, Dh]
+        scores = jnp.einsum("bhgqd,bkhd->bhgqk", qblk.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        qpos = q_offset + i * block_q + jnp.arange(block_q)
+        mask = jnp.ones((block_q, Sk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if sliding_window:
+            mask &= kpos[None, :] > qpos[:, None] - sliding_window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        out = jnp.einsum("bhgqk,bkhd->bhgqd",
+                         jax.nn.softmax(scores, axis=-1).astype(v.dtype), v)
+        return out
+
+    outs = jax.lax.map(lambda args: one_block(*args),
+                       (jnp.arange(nb), qb))
+    # outs: [nb, B, Hkv, G, bq, Dh] -> [B, S, Hq, Dh]
+    outs = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nb * block_q, Hq, Dh)
+    return outs[:, :Sq]
+
+
+def init_attn(key, cfg: ModelCfg):
+    if cfg.head_maps is not None:
+        # padded layout: initialize the EXACT config's weights with the same
+        # rng stream, then expand (dead slots zero, replicated kv shared) —
+        # function-equivalent to the unpadded model (tests/test_tp_align.py).
+        from repro.models import tp_align
+        q_src, kv_src, oh, okv = cfg.head_maps
+        base = dataclasses.replace(cfg, n_heads=oh, n_kv=okv, head_maps=None)
+        return tp_align.expand_attn_params(init_attn(key, base), q_src,
+                                           kv_src, cfg.d_head)
+    d, dq, dkv = cfg.d_model, cfg.d_qkv, cfg.n_kv * cfg.d_head
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = float(1.0 / np.sqrt(d))
+    p = {
+        "wq": jax.random.normal(k1, (d, dq), cfg.dtype) * s,
+        "wk": jax.random.normal(k2, (d, dkv), cfg.dtype) * s,
+        "wv": jax.random.normal(k3, (d, dkv), cfg.dtype) * s,
+        "wo": jax.random.normal(k4, (dq, d), cfg.dtype) * s,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((dq,), cfg.dtype)
+        p["bk"] = jnp.zeros((dkv,), cfg.dtype)
+        p["bv"] = jnp.zeros((dkv,), cfg.dtype)
+    return p
+
+
+def apply_attn(p, x, cfg: ModelCfg, rope, positions, kv_cache=None,
+               causal=True, xattn_kv=None):
+    """Returns (out, new_kv).  kv_cache: dict(k,v,len) for decode."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    src = xattn_kv if xattn_kv is not None else x
+    k = jnp.einsum("bsd,de->bse", src, p["wk"])
+    v = jnp.einsum("bsd,de->bse", src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, src.shape[1], cfg.n_kv, cfg.d_head)
+    v = v.reshape(B, src.shape[1], cfg.n_kv, cfg.d_head)
+    mode = attn_shard_mode(cfg)
+    block_q = 512
+    if mode == "head":
+        q = shard_hint(q, "dp", None, "tp", None)
+        k = shard_hint(k, "dp", None, "tp", None)
+        v = shard_hint(v, "dp", None, "tp", None)
+    elif mode == "head_q":
+        q = shard_hint(q, "dp", None, "tp", None)
+        k = shard_hint(k, "dp", None, None, None)
+        v = shard_hint(v, "dp", None, None, None)
+    elif mode == "seq" and S > 1:
+        # context parallelism: the sharded q-seq axis already bounds the
+        # score working set; q-chunking would slice a sharded dim (forces
+        # SPMD rematerialization) so disable it.
+        q = shard_hint(q, "dp", "tp", None, None)
+        k = shard_hint(k, "dp", None, None, None)
+        v = shard_hint(v, "dp", None, None, None)
+        block_q = S
+    if xattn_kv is None and rope is not None:
+        cos, sin = rope
+        q = apply_rope(q, cos, sin, positions)
+        k = apply_rope(k, cos, sin, positions)
+
+    new_cache = None
+    q_offset = 0
+    if kv_cache is not None:
+        # decode: write at position `len` with an iota-mask select rather
+        # than dynamic_update_slice — elementwise on the (possibly
+        # seq-sharded) cache axis, so SPMD never gathers the cache.
+        idx = kv_cache["len"]
+        seqpos = jnp.arange(kv_cache["k"].shape[1])
+        wmask = (seqpos == idx)[None, :, None, None]
+        ck = jnp.where(wmask, k.astype(kv_cache["k"].dtype),
+                       kv_cache["k"])
+        cv = jnp.where(wmask, v.astype(kv_cache["v"].dtype),
+                       kv_cache["v"])
+        new_cache = {"k": ck, "v": cv, "len": idx + S}
+        k, v = ck, cv
+        q_offset = idx
+    out = chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                            sliding_window=cfg.sliding_window,
+                            block_q=block_q)
+    out = out.reshape(B, S, cfg.d_qkv)
+    # row-parallel wo: contract over the model-sharded feature dim
+    out = shard_hint(out, "dp", None, "tp")
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]), new_cache
+
+
+def init_mlp(key, d: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s, s2 = float(1.0 / np.sqrt(d)), float(1.0 / np.sqrt(d_ff))
+    return {
+        "w_gate": jax.random.normal(k1, (d, d_ff), dtype) * s,
+        "w_up": jax.random.normal(k2, (d, d_ff), dtype) * s,
+        "w_down": jax.random.normal(k3, (d_ff, d), dtype) * s2,
+    }
+
+
+def apply_mlp(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"])

@@ -1,0 +1,263 @@
+"""State-space / linear-recurrence blocks: Mamba (for Jamba's hybrid stack)
+and RWKV-6 "Finch" (data-dependent decay).
+
+Both expose a parallel (training/prefill) form via scans and a single-step
+recurrent form for decode — the constant-state property is what makes the
+``long_500k`` shape runnable for these families (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelCfg, shard_hint
+
+
+# ---------------------------------------------------------------- Mamba ----
+def init_mamba(key, cfg: ModelCfg):
+    d = cfg.d_model
+    d_in = 2 * d
+    ds = cfg.d_state
+    ks = jax.random.split(key, 6)
+    s = float(1.0 / np.sqrt(d))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * d_in), cfg.dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (4, d_in), cfg.dtype) * 0.2,
+        "x_proj": jax.random.normal(ks[2], (d_in, 2 * ds + 1), cfg.dtype) * s,
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (d_in, 1))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": jax.random.normal(ks[3], (d_in, d), cfg.dtype) * s,
+    }
+
+
+def apply_mamba(p, x, cfg: ModelCfg, state=None):
+    """x: [B, S, d].  state: None (parallel) or dict(conv, ssm) for decode.
+
+    Returns (y, new_state)."""
+    B, S, d = x.shape
+    d_in = 2 * d
+    ds = cfg.d_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv (k=4)
+    if state is None:
+        pad = jnp.zeros((B, 3, d_in), xs.dtype)
+        xpad = jnp.concatenate([pad, xs], axis=1)
+        new_conv = xpad[:, -3:]
+    else:
+        xpad = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+        new_conv = xpad[:, -3:]
+    xc = sum(xpad[:, i:i + S] * p["conv_w"][i] for i in range(4))
+    xc = jax.nn.silu(xc)
+
+    proj = jnp.einsum("bse,ek->bsk", xc, p["x_proj"]).astype(jnp.float32)
+    Bm, Cm, dt = proj[..., :ds], proj[..., ds:2 * ds], proj[..., -1:]
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None, ...].mean())  # [B,S,1]
+    A = -jnp.exp(p["A_log"])                                   # [d_in, ds]
+    xcf = xc.astype(jnp.float32)
+    # discretize: h_t = exp(dt*A) h_{t-1} + dt * B_t * x_t
+    decay = jnp.exp(dt[..., None] * A[None, None])             # [B,S,d_in,ds]
+    drive = (dt[..., None] * Bm[:, :, None, :]) * xcf[..., None]
+
+    if state is None:
+        # Chunked scan (HBM-fit, EXPERIMENTS.md §HBM-fit): a full-sequence
+        # associative scan materializes log(S) stage buffers of
+        # [B,S,d_in,ds] — 'jamba train_4k' peaked at ~300 GiB/device.
+        # Scanning C-token chunks (assoc-scan inside, sequential carry
+        # between) bounds the working set to O(C/S) of that at the same
+        # math: h_t = cumdecay_t * h_chunk0 + intra-chunk scan.
+        C = 256 if S % 256 == 0 else S
+        n = S // C
+        d4 = decay.reshape(B, n, C, d_in, ds).transpose(1, 0, 2, 3, 4)
+        r4 = drive.reshape(B, n, C, d_in, ds).transpose(1, 0, 2, 3, 4)
+        # keep d_in tp-sharded through the chunk scan: without explicit
+        # hints GSPMD replicates the carry (and with it every stage buffer
+        # — jamba prefill peaked at 64 GiB x hundreds; §HBM-fit)
+        d4 = shard_hint(d4, None, "dp", None, "tp", None)
+        r4 = shard_hint(r4, None, "dp", None, "tp", None)
+
+        def comb(a, b):
+            return (a[0] * b[0], a[1] * b[0] + b[1])
+
+        def chunk_body(h0, inp):
+            dc, dr = inp                       # [B, C, d_in, ds]
+            cum, intra = jax.lax.associative_scan(comb, (dc, dr), axis=1)
+            hs = intra + cum * h0[:, None]
+            hs = shard_hint(hs, "dp", None, "tp", None)
+            return hs[:, -1], hs
+
+        h_init = shard_hint(jnp.zeros((B, d_in, ds), jnp.float32),
+                            "dp", "tp", None)
+        new_ssm, hs = jax.lax.scan(chunk_body, h_init, (d4, r4))
+        h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, d_in, ds)
+    else:
+        h0 = state["ssm"]
+        h = decay[:, 0] * h0 + drive[:, 0]
+        new_ssm = h
+        h = h[:, None]
+    y = jnp.einsum("bses,bss->bse".replace("ss,", "sn,").replace("es", "en"),
+                   h, Cm) if False else jnp.einsum("bsen,bsn->bse", h, Cm)
+    y = y + xcf * p["D"][None, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
+# ---------------------------------------------------------------- RWKV-6 ---
+def init_rwkv6(key, cfg: ModelCfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    s = float(1.0 / np.sqrt(d))
+    return {
+        "t_mix": jax.random.uniform(ks[0], (5, d), cfg.dtype),  # r,k,v,w,g
+        "wr": jax.random.normal(ks[1], (d, d), cfg.dtype) * s,
+        "wk": jax.random.normal(ks[2], (d, d), cfg.dtype) * s,
+        "wv": jax.random.normal(ks[3], (d, d), cfg.dtype) * s,
+        "wg": jax.random.normal(ks[4], (d, d), cfg.dtype) * s,
+        "ww": jax.random.normal(ks[5], (d, 64), cfg.dtype) * s,   # decay lora
+        "ww2": jax.random.normal(ks[6], (64, d), cfg.dtype) * 0.1,
+        "w_bias": jnp.full((d,), -6.0, jnp.float32),
+        "u": jnp.zeros((d,), jnp.float32),                        # bonus
+        "wo": jax.random.normal(ks[7], (d, d), cfg.dtype) * s,
+    }
+
+
+def rwkv6_chunked_jnp(rh, kh, vh, wh, u, wkv0, chunk: int = 16):
+    """Chunked RWKV-6 recurrence (jnp mirror of kernels/rwkv6_chunked.py).
+
+    Perf (EXPERIMENTS.md §Perf, rwkv hillclimb): the per-token ``lax.scan``
+    touches the [B,H,hd,hd] state S times — a serial latency chain whose
+    modeled HBM traffic dominated rwkv6 train_4k (memory term 6.7e3 s).
+    Chunking moves the cross-token interaction into C-sized batched matmuls
+    with one state update per chunk: traffic drops ~C x and the MXU sees
+    [C,hd]x[hd,hd] GEMMs.  Pairwise decays use the numerically safe
+    difference form exp(L_{t-1}-L_s) <= 1 (no 1/A blowup).
+
+    rh/kh/vh/wh: [B, S, H, hd] f32; u: [H, hd]; wkv0: [B, H, hd, hd] f32.
+    Returns (y [B,S,H,hd] f32, wkv_final).
+    """
+    B, S, H, hd = rh.shape
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    n = S // C
+
+    logw = jnp.log(jnp.maximum(wh, 1e-30))                   # [B,S,H,hd]
+    resh = lambda a: a.reshape(B, n, C, H, hd).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, lw = resh(rh), resh(kh), resh(vh), resh(logw)
+
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    tril = (s_idx < t_idx)[None, :, :, None, None]           # strict lower
+
+    def chunk_step(S0, inp):
+        r, k, v, lwc = inp                                    # [B,C,H,hd]
+        L = jnp.cumsum(lwc, axis=1)
+        Lprev = L - lwc
+        # inter-chunk: y_t = (r_t * A_{t-1}) @ S0
+        rdec = r * jnp.exp(Lprev)
+        y = jnp.einsum("bthk,bhkv->bthv", rdec, S0)
+        # intra-chunk: scores[t,s] = sum_c r[t,c] k[s,c] exp(L_{t-1}-L_s)[c]
+        P = jnp.exp(Lprev[:, :, None] - L[:, None, :])        # [B,C,C,H,hd]
+        scores = jnp.einsum("bthc,bshc,btshc->btsh",
+                            r, k, jnp.where(tril, P, 0.0))
+        y = y + jnp.einsum("btsh,bshv->bthv", scores, v)
+        # bonus diagonal
+        bonus = jnp.sum(r * u[None, None] * k, axis=-1, keepdims=True)
+        y = y + bonus * v
+        # state to next chunk
+        A_C = jnp.exp(L[:, -1])                               # [B,H,hd]
+        kdec = k * jnp.exp(L[:, -1:] - L)
+        S_new = A_C[..., None] * S0 + jnp.einsum("bshk,bshv->bhkv", kdec, v)
+        return S_new, y
+
+    wkv, ys = jax.lax.scan(chunk_step, wkv0, (rc, kc, vc, lw))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return y, wkv
+
+
+def apply_rwkv6(p, x, cfg: ModelCfg, state=None, chunk: int = 16):
+    """RWKV-6 time-mix with data-dependent decay.
+
+    x: [B, S, d].  state: None or dict(shift [B,d], wkv [B,H,hd,hd]).
+    Multi-head with head dim 64; recurrence S_t = diag(w_t) S_{t-1} + k_t v_t^T.
+    Parallel form (training/prefill) runs the chunked recurrence; decode
+    (S small / state given) uses the exact per-token step.
+    """
+    B, S, d = x.shape
+    hd = 64
+    H = d // hd
+    if state is None:
+        x_prev = jnp.concatenate([jnp.zeros((B, 1, d), x.dtype), x[:, :-1]], 1)
+        wkv0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    else:
+        x_prev = jnp.concatenate([state["shift"][:, None], x[:, :-1]], 1)
+        wkv0 = state["wkv"]
+
+    mix = jax.nn.sigmoid(p["t_mix"])  # [5, d]
+    def mx(i):
+        return x * mix[i] + x_prev * (1 - mix[i])
+    r = jnp.einsum("bsd,de->bse", mx(0), p["wr"])
+    k = jnp.einsum("bsd,de->bse", mx(1), p["wk"])
+    v = jnp.einsum("bsd,de->bse", mx(2), p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mx(4), p["wg"]))
+    # data-dependent decay (Finch): w_t = exp(-exp(lora(x_t)))
+    wlog = jnp.einsum("bsd,dk->bsk", mx(3), p["ww"])
+    wlog = jnp.einsum("bsk,kd->bsd", jnp.tanh(wlog), p["ww2"])
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32) + p["w_bias"]))  # [B,S,d]
+
+    rh = r.reshape(B, S, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, H, hd).astype(jnp.float32)
+    wh = w.reshape(B, S, H, hd)
+    u = p["u"].reshape(H, hd)
+
+    import os
+    mode = os.environ.get("REPRO_RWKV_MODE", "chunked")  # ablation knob
+    if mode != "scan" and S % min(chunk, S) == 0 and S > 1:
+        y4, wkv = rwkv6_chunked_jnp(rh, kh, vh, wh, u, wkv0, chunk=chunk)
+        ys = None
+    else:
+        def step(wkv, inp):
+            rt, kt, vt, wt = inp  # [B,H,hd]
+            # output uses current kv with bonus u before state decay-update
+            att = wkv + u[None, :, :, None] * (kt[..., None] * vt[..., None, :])
+            yt = jnp.einsum("bhk,bhkv->bhv", rt, att)
+            wkv = wt[..., None] * wkv + kt[..., None] * vt[..., None, :]
+            return wkv, yt
+
+        xs = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+              vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+        wkv, ys = jax.lax.scan(step, wkv0, xs)
+        y4 = ys.transpose(1, 0, 2, 3)
+    y = y4.reshape(B, S, d).astype(x.dtype)
+    y = y * g
+    out = jnp.einsum("bsd,de->bsd".replace("de", "de"), y, p["wo"])
+    new_state = {"shift": x[:, -1], "wkv": wkv}
+    return out, new_state
+
+
+def init_rwkv_cmix(key, cfg: ModelCfg):
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = float(1.0 / np.sqrt(d))
+    return {
+        "t_mix": jax.random.uniform(ks[0], (2, d), cfg.dtype),
+        "wk": jax.random.normal(ks[1], (d, dff), cfg.dtype) * s,
+        "wv": jax.random.normal(ks[2], (dff, d), cfg.dtype) * float(1.0 / np.sqrt(dff)),
+    }
+
+
+def apply_rwkv_cmix(p, x, state=None):
+    B, S, d = x.shape
+    if state is None:
+        x_prev = jnp.concatenate([jnp.zeros((B, 1, d), x.dtype), x[:, :-1]], 1)
+    else:
+        x_prev = jnp.concatenate([state[:, None], x[:, :-1]], 1)
+    mix = jax.nn.sigmoid(p["t_mix"])
+    xk = x * mix[0] + x_prev * (1 - mix[0])
+    h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    return jnp.einsum("bsf,fd->bsd", h, p["wv"]), x[:, -1]

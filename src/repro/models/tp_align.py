@@ -1,0 +1,121 @@
+"""GQA head alignment for tensor parallelism (§Perf hillclimb #2).
+
+Problem: classic head-sharded TP requires n_heads % tp == 0 *and*
+n_kv % tp == 0.  Several assigned configs violate this at tp=16 (qwen
+40H/8KV, phi3 40H/10KV, minicpm 36H/36KV, llava 56H/8KV, mixtral 32H/8KV,
+jamba 64H/8KV, whisper 12H/12KV), which forces the fallback
+sequence-sharded attention whose resharding lowers to involuntary
+full-rematerialization all-gathers — the dominant collective-roofline term
+for those cells (e.g. qwen prefill_32k: 444 s of modeled collective time).
+
+Fix (standard Megatron practice, made function-exact here):
+  1. *kv replication*: when tp % n_kv == 0, replicate each kv head
+     r = tp/n_kv times (wk/wv columns duplicated).  Attention output is
+     bit-identical: q-head group g of original kv head i attends to copy
+     (i*r + g//G') which holds the same k/v values.
+  2. *dead-head padding*: otherwise pad n_kv up to the next multiple of
+     tp with zero-initialized kv heads and pad the per-kv-group q-head
+     count G up to G' = ceil(G/r).  Dead q heads have zero wq columns and
+     zero wo rows, so they contribute exactly 0 to the output and receive
+     exactly 0 gradient (dout @ wo_dead^T = 0) — the padded model is
+     function- and training-trajectory-equivalent to the exact config.
+
+``aligned(cfg, tp)`` returns a new ModelCfg with padded head counts plus
+the q/kv source maps used by ``init_attn`` to materialize the padded
+weights from the exact config's initialization (tested for exact forward
+equality in tests/test_tp_align.py).
+
+Cost accounting (recorded in §Perf): padding adds dead-head FLOPs
+(qwen 48/40 = 1.2x attention q-side) and kv-cache bytes (r or pad factor),
+which the corrected-HLO roofline counts honestly; the collective term
+drops by orders of magnitude because attention stays head-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+def plan(n_heads: int, n_kv: int, tp: int) -> dict:
+    """Compute the aligned head layout for a tp-way model axis."""
+    G = n_heads // n_kv
+    if n_kv % tp == 0 and n_heads % tp == 0:
+        return {"n_heads": n_heads, "n_kv": n_kv, "r": 1, "G": G,
+                "q_src": list(range(n_heads)), "kv_src": list(range(n_kv)),
+                "noop": True}
+    if tp % n_kv == 0:
+        r = tp // n_kv
+        kv_pad = n_kv * r                  # pure replication
+    else:
+        r = 1
+        kv_pad = math.ceil(n_kv / tp) * tp  # dead-kv padding
+    Gp = math.ceil(G / r)
+    # ensure the padded q-head count shards: (kv_pad * Gp) % tp == 0 holds
+    # automatically since kv_pad % tp == 0.
+    kv_src, q_src = [], []
+    for j in range(kv_pad):
+        orig_kv = j // r if (j // r) < n_kv else -1
+        kv_src.append(orig_kv)
+    for j in range(kv_pad):
+        orig_kv = kv_src[j]
+        for s in range(Gp):
+            if orig_kv < 0:
+                q_src.append(-1)
+                continue
+            # slot index within the original group of G q-heads
+            slot = (j % r) * Gp + s if r > 1 else s
+            q_src.append(orig_kv * G + slot if slot < G else -1)
+    return {"n_heads": kv_pad * Gp, "n_kv": kv_pad, "r": r, "G": Gp,
+            "q_src": q_src, "kv_src": kv_src, "noop": False}
+
+
+def aligned(cfg, tp: int):
+    """ModelCfg with TP-aligned head counts; source maps in ``head_maps``."""
+    pl = plan(cfg.n_heads, cfg.n_kv, tp)
+    if pl["noop"]:
+        return cfg
+    return dataclasses.replace(cfg, n_heads=pl["n_heads"], n_kv=pl["n_kv"],
+                               head_maps=(tuple(pl["q_src"]),
+                                          tuple(pl["kv_src"]),
+                                          cfg.n_heads, cfg.n_kv))
+
+
+def expand_attn_params(p_exact: dict, q_src, kv_src, d_head: int) -> dict:
+    """Expand exact-config attention weights into the padded layout.
+
+    Dead slots (src == -1) are zero — exact function equivalence."""
+    import jax.numpy as jnp
+
+    def take_cols(w, srcs):
+        d = w.shape[0]
+        cols = w.reshape(d, -1, d_head)
+        out = jnp.stack([cols[:, s] if s >= 0 else jnp.zeros_like(cols[:, 0])
+                         for s in srcs], axis=1)
+        return out.reshape(d, len(srcs) * d_head)
+
+    def take_rows(w, srcs):
+        dm = w.shape[1]
+        rows = w.reshape(-1, d_head, dm)
+        out = jnp.stack([rows[s] if s >= 0 else jnp.zeros_like(rows[0])
+                         for s in srcs], axis=0)
+        return out.reshape(len(srcs) * d_head, dm)
+
+    def take_bias(b, srcs):
+        seg = b.reshape(-1, d_head)
+        out = jnp.stack([seg[s] if s >= 0 else jnp.zeros_like(seg[0])
+                         for s in srcs], axis=0)
+        return out.reshape(len(srcs) * d_head)
+
+    out = {
+        "wq": take_cols(p_exact["wq"], q_src),
+        "wk": take_cols(p_exact["wk"], kv_src),
+        "wv": take_cols(p_exact["wv"], kv_src),
+        "wo": take_rows(p_exact["wo"], q_src),
+    }
+    if "bq" in p_exact:
+        out["bq"] = take_bias(p_exact["bq"], q_src)
+        out["bk"] = take_bias(p_exact["bk"], kv_src)
+        out["bv"] = take_bias(p_exact["bv"], kv_src)
+    return out

@@ -1,0 +1,469 @@
+"""Packet-level network simulator, fully vectorized as a ``lax.scan`` over
+ticks (1 tick = 83.2 ns = serialization of one 4160 B packet @ 400 Gb/s).
+
+TPU-native re-think of htsim's event queues (DESIGN.md §3): the in-flight
+packet table is a fixed-shape structure-of-arrays; per-port FIFO order is
+preserved *analytically* with a service-slot counter per port:
+
+    depart(pkt) = max(tail[port], t) + rank_within_tick + 1
+    tail[port] += #accepted            occupancy(port) = max(tail - t, 0)
+
+so there are no queue data structures at all — enqueue, RED/ECN marking,
+trimming, service, propagation, CC and the Spritz control loop are all dense
+array ops over the packet table.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spritz as SZ
+from repro.net.sim.types import (ECMP, FB_ACK_ECN, FB_ACK_OK, FB_NACK,
+                                 FB_NONE, FB_TIMEOUT, FLICR_W, MINIMAL, OPS_U,
+                                 OPS_W, P_ACKWAIT, P_FREE, P_LOST, P_NACKWAIT,
+                                 P_PROP, P_QUEUED, SCOUT, SPRAY_U, SPRAY_W,
+                                 SPRITZ_SCHEMES, UGAL_L, VALIANT, SimResult,
+                                 SimSpec)
+
+
+class Carry(NamedTuple):
+    rng: jax.Array
+    q_tail: jax.Array          # [n_ports] i32
+    # packet table
+    pstate: jax.Array          # [N] i32
+    pflow: jax.Array           # [N] i32
+    ppath: jax.Array           # [N] i32
+    phop: jax.Array            # [N] i32
+    pevent: jax.Array          # [N] i32
+    pecn: jax.Array            # [N] bool
+    pexp: jax.Array            # [N] bool (exploration/sampled packet)
+    psent: jax.Array           # [N] i32
+    ppsn: jax.Array            # [N] i32
+    # flow state
+    next_seq: jax.Array        # [F] i32
+    acked: jax.Array
+    retx_pend: jax.Array
+    inflight: jax.Array
+    inj_cnt: jax.Array
+    exp_psn: jax.Array
+    cwnd: jax.Array            # [F] f32
+    alpha: jax.Array
+    exp_alpha: jax.Array       # [F] f32 ECN rate over exploration packets
+    round_acks: jax.Array
+    round_marks: jax.Array
+    round_nacks: jax.Array
+    round_size: jax.Array
+    flicr_cur: jax.Array
+    flicr_marks: jax.Array
+    spritz: SZ.SpritzState
+    # stats
+    fct: jax.Array
+    delivered: jax.Array
+    trims: jax.Array
+    timeouts: jax.Array
+    ooo: jax.Array
+    retx: jax.Array
+
+
+def _seg_min_index(mask: jax.Array, pflow: jax.Array, F: int) -> jax.Array:
+    """Per-flow min packet index among masked packets (N if none)."""
+    N = mask.shape[0]
+    idx = jnp.where(mask, jnp.arange(N, dtype=jnp.int32), N)
+    tgt = jnp.where(mask, pflow, F)
+    out = jnp.full(F + 1, N, jnp.int32).at[tgt].min(idx)
+    return out[:F]
+
+
+def _seg_sum(val: jax.Array, pflow: jax.Array, mask: jax.Array, F: int) -> jax.Array:
+    tgt = jnp.where(mask, pflow, F)
+    out = jnp.zeros(F + 1, val.dtype).at[tgt].add(jnp.where(mask, val, 0))
+    return out[:F]
+
+
+def _weighted_sample_rows(rng, w):
+    csum = jnp.cumsum(w, axis=-1)
+    u = jax.random.uniform(rng, (w.shape[0], 1)) * jnp.maximum(csum[:, -1:], 1e-30)
+    return jnp.minimum(jnp.sum((csum < u).astype(jnp.int32), -1), w.shape[-1] - 1)
+
+
+def build_step(spec: SimSpec):
+    """Returns the jit-able per-tick transition function."""
+    F = spec.n_flows
+    N = spec.n_pkt
+    NP_ = spec.n_ports
+
+    # static device arrays
+    path_ports = jnp.asarray(spec.path_ports, jnp.int32)      # [F,P,H]
+    path_len = jnp.asarray(spec.path_len, jnp.int32)          # [F,P]
+    path_lat = jnp.asarray(spec.path_lat_ns, jnp.float32)     # [F,P]
+    weights = jnp.asarray(spec.weights, jnp.float32)
+    valiant_w = jnp.asarray(spec.valiant_w, jnp.float32)
+    static_path = jnp.asarray(spec.static_path, jnp.int32)
+    min_path = jnp.asarray(spec.min_path, jnp.int32)
+    ret_ticks = jnp.asarray(spec.ret_ticks, jnp.int32)        # [F,P]
+    rem_ticks = jnp.asarray(spec.rem_ticks, jnp.int32)        # [F,P,H]
+    port_lat = jnp.asarray(spec.port_lat, jnp.int32)          # [ports]
+    port_failed = jnp.asarray(spec.port_failed, bool)
+    src_ep = jnp.asarray(spec.src_ep, jnp.int32)
+    size_pkts = jnp.asarray(spec.size_pkts, jnp.int32)
+    start_tick = jnp.asarray(spec.start_tick, jnp.int32)
+    dep = jnp.asarray(spec.dep, jnp.int32)
+    bg_mask = jnp.asarray(spec.bg_mask, bool)
+    has_dep = bool((spec.dep >= 0).any())
+    has_bg = bool(spec.bg_mask.any())
+
+    scheme = spec.scheme
+    is_spritz = scheme in SPRITZ_SCHEMES
+    sz_cfg = SZ.SpritzConfig(
+        explore_threshold=spec.explore_threshold,
+        ecn_threshold=spec.ecn_threshold,
+        min_bias_factor=spec.min_bias_factor,
+        block_ticks=spec.block_ticks,
+        variant=SZ.SCOUT if scheme == SCOUT else SZ.SPRAY,
+        always_sample=False,
+    )
+    n_eps = int(spec.src_ep.max()) + 1 if len(spec.src_ep) else 1
+
+    def gather_fp(arr2d, path_idx):
+        return jnp.take_along_axis(arr2d, path_idx[:, None], axis=1)[:, 0]
+
+    def choose_paths(c: Carry, t, rng_c, occ):
+        """Per-flow path decision for this tick's injections."""
+        if scheme in (MINIMAL, ECMP):
+            return c, static_path
+        if scheme == VALIANT:
+            return c, _weighted_sample_rows(rng_c, valiant_w)
+        if scheme in (OPS_U, OPS_W):
+            return c, _weighted_sample_rows(rng_c, weights)
+        if scheme == UGAL_L:
+            cand = _weighted_sample_rows(rng_c, valiant_w)
+            first_min = path_ports[jnp.arange(F), min_path, 0]
+            first_val = path_ports[jnp.arange(F), cand, 0]
+            q_min = occ[first_min].astype(jnp.float32)
+            q_val = occ[first_val].astype(jnp.float32)
+            h_min = gather_fp(path_len, min_path).astype(jnp.float32)
+            h_val = gather_fp(path_len, cand).astype(jnp.float32)
+            pick_min = q_min * h_min <= q_val * h_val
+            return c, jnp.where(pick_min, min_path, cand)
+        if scheme == FLICR_W:
+            move = c.flicr_marks >= spec.flicr_ecn_move
+            fresh = _weighted_sample_rows(rng_c, weights)
+            path = jnp.where(move, fresh, c.flicr_cur)
+            c = c._replace(
+                flicr_cur=path,
+                flicr_marks=jnp.where(move, 0, c.flicr_marks),
+            )
+            return c, path
+        # Spritz Scout/Spray
+        return c, None  # handled with send_logic (needs `active` mask)
+
+    def step(c: Carry, t):
+        rng, k_inj, k_path, k_mark = jax.random.split(c.rng, 4)
+        t = t.astype(jnp.int32)
+        occ = jnp.maximum(c.q_tail - t, 0)
+
+        # ---------------- A. feedback arrivals + timeouts -------------------
+        ack_m = (c.pstate == P_ACKWAIT) & (c.pevent == t)
+        nack_m = (c.pstate == P_NACKWAIT) & (c.pevent == t)
+        inflight_states = (c.pstate == P_QUEUED) | (c.pstate == P_PROP) | (c.pstate == P_LOST)
+        to_m = inflight_states & (t - c.psent > spec.rto_ticks)
+
+        one = jnp.ones(N, jnp.int32)
+        n_ack = _seg_sum(one, c.pflow, ack_m, F)
+        n_mark = _seg_sum(one, c.pflow, ack_m & c.pecn, F)
+        n_nack = _seg_sum(one, c.pflow, nack_m, F)
+        n_to = _seg_sum(one, c.pflow, to_m, F)
+        # network-wide congestion estimate from exploration packets only
+        n_exp = _seg_sum(one, c.pflow, (ack_m | nack_m) & c.pexp, F)
+        n_exp_bad = _seg_sum(one, c.pflow,
+                             ((ack_m & c.pecn) | nack_m) & c.pexp, F)
+        g2 = spec.dctcp_g
+        exp_alpha = jnp.where(
+            n_exp > 0,
+            (1 - g2) * c.exp_alpha + g2 * n_exp_bad / jnp.maximum(n_exp, 1),
+            c.exp_alpha)
+
+        # representative feedback event per flow (priority TO > NACK > ECN > OK)
+        rep_to = _seg_min_index(to_m, c.pflow, F)
+        rep_nack = _seg_min_index(nack_m, c.pflow, F)
+        rep_ecn = _seg_min_index(ack_m & c.pecn, c.pflow, F)
+        rep_ok = _seg_min_index(ack_m & ~c.pecn, c.pflow, F)
+        ppath_x = jnp.concatenate([c.ppath, jnp.zeros(1, jnp.int32)])  # idx N pad
+
+        fb_type = jnp.full(F, FB_NONE, jnp.int32)
+        fb_ev = jnp.zeros(F, jnp.int32)
+        for rep, code in ((rep_ok, FB_ACK_OK), (rep_ecn, FB_ACK_ECN),
+                          (rep_nack, FB_NACK), (rep_to, FB_TIMEOUT)):
+            has = rep < N
+            fb_type = jnp.where(has, code, fb_type)
+            fb_ev = jnp.where(has, ppath_x[jnp.minimum(rep, N)], fb_ev)
+
+        # --- CC (DCTCP + SMaRTT-style QuickAdapt/FastIncrease) ---
+        # ECN marks drive the DCTCP alpha cut; QuickAdapt fires only on
+        # heavy *trimming* (real loss), resetting cwnd to the delivered
+        # bytes of the last window — SMaRTT semantics.  Conflating marks
+        # with trims nukes cwnd on any briefly-marked round, which
+        # penalizes path-pinned senders (Scout) far beyond the paper's CC.
+        cwnd, alpha = c.cwnd, c.alpha
+        r_acks = c.round_acks + n_ack + n_nack
+        r_marks = c.round_marks + n_mark + n_nack
+        r_nacks = c.round_nacks + n_nack
+        round_thr = jnp.maximum(1, jnp.minimum(c.round_size,
+                                               cwnd.astype(jnp.int32)))
+        round_done = r_acks >= round_thr
+        frac = r_marks / jnp.maximum(r_acks, 1)
+        frac_trim = r_nacks / jnp.maximum(r_acks, 1)
+        alpha_new = (1 - spec.dctcp_g) * alpha + spec.dctcp_g * frac
+        alpha = jnp.where(round_done, alpha_new, alpha)
+        cw_cut = jnp.maximum(1.0, cwnd * (1 - alpha / 2))
+        cw_qa = jnp.maximum(1.0, (r_acks - r_nacks).astype(jnp.float32))
+        cw_fi = jnp.minimum(spec.cwnd_max, cwnd * 1.25)
+        cw_round = jnp.where(
+            (frac_trim > 0.5) & spec.quick_adapt, jnp.minimum(cw_qa, cw_cut),
+            jnp.where(r_marks > 0, cw_cut,
+                      jnp.where(spec.fast_increase, cw_fi, cwnd)))
+        cwnd = jnp.where(round_done, cw_round, cwnd)
+        r_size = jnp.where(round_done, jnp.maximum(cwnd.astype(jnp.int32), 1),
+                           c.round_size)
+        r_acks = jnp.where(round_done, 0, r_acks)
+        r_marks = jnp.where(round_done, 0, r_marks)
+        r_nacks = jnp.where(round_done, 0, r_nacks)
+        # additive increase per clean ACK; hard reset only on timeout
+        cwnd = jnp.minimum(spec.cwnd_max, cwnd + n_ack / jnp.maximum(cwnd, 1.0))
+        cwnd = jnp.where(n_to > 0, 1.0, cwnd)
+
+        # --- Spritz feedback ---
+        spritz = c.spritz
+        if is_spritz:
+            spritz = SZ.feedback_logic(spritz, sz_cfg, fb_ev, fb_type,
+                                       exp_alpha, path_lat, t)
+        flicr_marks = c.flicr_marks + n_mark + 8 * (n_nack + n_to)
+
+        acked = c.acked + n_ack
+        inflight = c.inflight - n_ack - n_nack - n_to
+        retx_pend = c.retx_pend + n_nack + n_to
+        done_now = (acked >= size_pkts) & (c.fct < 0)
+        fct = jnp.where(done_now, t - start_tick, c.fct)
+
+        # free finished packet slots
+        pstate = jnp.where(ack_m | nack_m | to_m, P_FREE, c.pstate)
+
+        # ---------------- B. service (dequeue) ------------------------------
+        svc = (pstate == P_QUEUED) & (c.pevent == t)
+        cur_port = path_ports[c.pflow, c.ppath, c.phop]
+        plen = path_len[c.pflow, c.ppath]
+        at_delivery = c.phop == plen - 1
+        deliver = svc & at_delivery
+        forward = svc & ~at_delivery
+
+        # OOO accounting at delivery (<=1 delivery per flow per tick)
+        dflow = jnp.where(deliver, c.pflow, F)
+        dpsn = _seg_sum(c.ppsn, c.pflow, deliver, F)  # sum == value (one pkt)
+        has_del = _seg_sum(one, c.pflow, deliver, F) > 0
+        is_ooo = has_del & (dpsn != c.exp_psn)
+        ooo = c.ooo + is_ooo.astype(jnp.int32)
+        exp_psn = jnp.where(has_del, jnp.maximum(c.exp_psn, dpsn + 1), c.exp_psn)
+        del dflow
+
+        ret = ret_ticks[c.pflow, c.ppath]
+        pevent = jnp.where(deliver, t + ret, c.pevent)
+        pstate = jnp.where(deliver, P_ACKWAIT, pstate)
+        pevent = jnp.where(forward, t + port_lat[cur_port], pevent)
+        pstate = jnp.where(forward, P_PROP, pstate)
+
+        # ---------------- C. propagation arrivals ---------------------------
+        arrive = (pstate == P_PROP) & (pevent == t)
+        phop = jnp.where(arrive, c.phop + 1, c.phop)
+
+        # ---------------- D. injection --------------------------------------
+        work_left = (c.next_seq < size_pkts) | (retx_pend > 0)
+        eligible = (t >= start_tick) & (acked < size_pkts) & work_left & \
+                   (inflight < jnp.floor(cwnd).astype(jnp.int32)) & (c.fct < 0)
+        if has_dep:
+            fct_x = jnp.concatenate([fct, jnp.zeros(1, jnp.int32)])
+            dep_done = (dep < 0) | (fct_x[jnp.maximum(dep, -1)] >= 0)
+            # dep == -1 gathers fct_x[-1] == trash; masked by dep < 0 above
+            eligible = eligible & dep_done
+        # endpoint arbitration: one flow per source endpoint per tick
+        prio = ((t * jnp.int32(40503) + jnp.arange(F, dtype=jnp.int32) * 9973)
+                & 0xffff) + 1
+        prio = jnp.where(eligible, prio, 0)
+        key = prio * F + (F - 1 - jnp.arange(F, dtype=jnp.int32))  # unique
+        ep_best = jnp.zeros(n_eps, jnp.int32).at[src_ep].max(key)
+        win = eligible & (key == ep_best[src_ep])
+
+        # free-slot allocation
+        free_m = pstate == P_FREE
+        n_free = jnp.cumsum(free_m.astype(jnp.int32))
+        free_rank = n_free - 1  # rank among free slots
+        slot_by_rank = jnp.full(N + 1, N, jnp.int32).at[
+            jnp.where(free_m, free_rank, N)].min(jnp.arange(N, dtype=jnp.int32))
+        win_rank = jnp.cumsum(win.astype(jnp.int32)) - 1
+        have_slot = win & (win_rank < n_free[-1])
+        flow_slot = slot_by_rank[jnp.minimum(win_rank, N)]  # [F]
+
+        # path choice
+        c2 = c
+        explored = jnp.ones(F, bool)
+        if is_spritz:
+            spritz, path_sel, explored = SZ.send_logic(spritz, sz_cfg, k_path,
+                                                       t, have_slot)
+        else:
+            c2, path_sel = choose_paths(c._replace(flicr_marks=flicr_marks), t,
+                                        k_path, occ)
+            flicr_marks = c2.flicr_marks
+        flicr_cur = c2.flicr_cur if scheme == FLICR_W else c.flicr_cur
+        if has_bg:  # background jobs stay on static ECMP paths (paper §V-B)
+            path_sel = jnp.where(bg_mask, static_path, path_sel)
+
+        # write new packets (scatter via trash row N)
+        tgt = jnp.where(have_slot, flow_slot, N)
+        def scatter_new(arr, val):
+            big = jnp.concatenate([arr, jnp.zeros((1,), arr.dtype)])
+            big = big.at[tgt].set(val.astype(arr.dtype))
+            return big[:N]
+
+        pflow = scatter_new(c.pflow, jnp.arange(F, dtype=jnp.int32))
+        ppath = scatter_new(c.ppath, path_sel)
+        phop = scatter_new(phop, jnp.zeros(F, jnp.int32))
+        psent = scatter_new(c.psent, jnp.full(F, t, jnp.int32))
+        ppsn = scatter_new(c.ppsn, c.inj_cnt)
+        pecn = scatter_new(c.pecn, jnp.zeros(F, bool))
+        pexp = scatter_new(c.pexp, explored)
+        pstate = scatter_new(pstate, jnp.full(F, P_PROP, jnp.int32))  # placeholder
+        pevent = scatter_new(pevent, jnp.full(F, t, jnp.int32))
+        # injected packets "arrive" at hop-0 port this tick:
+        injected_pkt = jnp.zeros(N + 1, bool).at[tgt].set(True)[:N]
+
+        is_retx = have_slot & (retx_pend > 0)
+        retx_pend = retx_pend - is_retx.astype(jnp.int32)
+        next_seq = c.next_seq + (have_slot & ~is_retx).astype(jnp.int32)
+        inj_cnt = c.inj_cnt + have_slot.astype(jnp.int32)
+        inflight = inflight + have_slot.astype(jnp.int32)
+        retx_stat = c.retx + is_retx.astype(jnp.int32)
+
+        # ---------------- E. enqueue (arrivals + injections) ----------------
+        enq = arrive | injected_pkt
+        eport = path_ports[pflow, ppath, phop]
+        eport = jnp.where(enq, eport, NP_)
+        failed = enq & port_failed[jnp.minimum(eport, NP_ - 1)] & (eport < NP_)
+        enq = enq & ~failed
+        pstate = jnp.where(failed, P_LOST, pstate)
+
+        # FIFO rank among same-tick arrivals per port
+        sort_key = jnp.where(enq, eport, NP_ + 1)
+        order = jnp.argsort(sort_key)
+        sorted_port = sort_key[order]
+        pos = jnp.arange(N, dtype=jnp.int32)
+        is_start = jnp.concatenate([jnp.ones(1, bool),
+                                    sorted_port[1:] != sorted_port[:-1]])
+        seg_start = jax.lax.associative_scan(jnp.maximum,
+                                             jnp.where(is_start, pos, 0))
+        rank_sorted = pos - seg_start
+        rank = jnp.zeros(N, jnp.int32).at[order].set(rank_sorted)
+
+        tail_e = c.q_tail[jnp.minimum(eport, NP_ - 1)]
+        occ_at = jnp.maximum(tail_e - t, 0) + rank
+        trim = enq & (occ_at >= spec.qsize)
+        accept = enq & ~trim
+
+        # RED / ECN marking probability between kmin..kmax
+        pr = jnp.clip((occ_at.astype(jnp.float32) - spec.kmin)
+                      / max(spec.kmax - spec.kmin, 1e-9), 0.0, 1.0)
+        mark = accept & (jax.random.uniform(k_mark, (N,)) < pr)
+        pecn = pecn | mark
+
+        slot = jnp.maximum(tail_e, t) + rank + 1
+        pevent = jnp.where(accept, slot, pevent)
+        pstate = jnp.where(accept, P_QUEUED, pstate)
+
+        # trimmed: header continues + NACK returns (priority, prop-only)
+        nack_at = t + rem_ticks[pflow, ppath, jnp.minimum(phop, rem_ticks.shape[2] - 1)]
+        pevent = jnp.where(trim, nack_at, pevent)
+        pstate = jnp.where(trim, P_NACKWAIT, pstate)
+        trims = c.trims + _seg_sum(one, pflow, trim, F)
+        timeouts = c.timeouts + n_to
+        delivered = c.delivered + n_ack
+
+        n_acc = jnp.zeros(NP_ + 2, jnp.int32).at[jnp.minimum(eport, NP_ + 1)].add(
+            accept.astype(jnp.int32))[:NP_]
+        q_tail = jnp.where(n_acc > 0, jnp.maximum(c.q_tail, t) + n_acc, c.q_tail)
+
+        return Carry(
+            rng=rng, q_tail=q_tail,
+            pstate=pstate, pflow=pflow, ppath=ppath, phop=phop, pevent=pevent,
+            pecn=pecn, pexp=pexp, psent=psent, ppsn=ppsn,
+            next_seq=next_seq, acked=acked, retx_pend=retx_pend,
+            inflight=inflight, inj_cnt=inj_cnt, exp_psn=exp_psn,
+            cwnd=cwnd, alpha=alpha, exp_alpha=exp_alpha,
+            round_acks=r_acks, round_marks=r_marks, round_nacks=r_nacks,
+            round_size=r_size, flicr_cur=flicr_cur, flicr_marks=flicr_marks,
+            spritz=spritz,
+            fct=fct, delivered=delivered, trims=trims, timeouts=timeouts,
+            ooo=ooo, retx=retx_stat,
+        ), None
+
+    return step
+
+
+def init_carry(spec: SimSpec, seed: int = 0) -> Carry:
+    F, N = spec.n_flows, spec.n_pkt
+    return Carry(
+        rng=jax.random.PRNGKey(seed),
+        q_tail=jnp.zeros(spec.n_ports, jnp.int32),
+        pstate=jnp.zeros(N, jnp.int32), pflow=jnp.zeros(N, jnp.int32),
+        ppath=jnp.zeros(N, jnp.int32), phop=jnp.zeros(N, jnp.int32),
+        pevent=jnp.zeros(N, jnp.int32), pecn=jnp.zeros(N, bool),
+        pexp=jnp.zeros(N, bool),
+        psent=jnp.zeros(N, jnp.int32), ppsn=jnp.zeros(N, jnp.int32),
+        next_seq=jnp.zeros(F, jnp.int32), acked=jnp.zeros(F, jnp.int32),
+        retx_pend=jnp.zeros(F, jnp.int32), inflight=jnp.zeros(F, jnp.int32),
+        inj_cnt=jnp.zeros(F, jnp.int32), exp_psn=jnp.zeros(F, jnp.int32),
+        cwnd=jnp.full(F, spec.cwnd_init, jnp.float32),
+        alpha=jnp.zeros(F, jnp.float32),
+        exp_alpha=jnp.zeros(F, jnp.float32),
+        round_acks=jnp.zeros(F, jnp.int32), round_marks=jnp.zeros(F, jnp.int32),
+        round_nacks=jnp.zeros(F, jnp.int32),
+        round_size=jnp.full(F, max(int(spec.cwnd_init), 1), jnp.int32),
+        flicr_cur=jnp.asarray(spec.static_path, jnp.int32),
+        flicr_marks=jnp.zeros(F, jnp.int32),
+        spritz=SZ.init_state(jnp.asarray(spec.weights, jnp.float32)),
+        fct=jnp.full(F, -1, jnp.int32), delivered=jnp.zeros(F, jnp.int32),
+        trims=jnp.zeros(F, jnp.int32), timeouts=jnp.zeros(F, jnp.int32),
+        ooo=jnp.zeros(F, jnp.int32), retx=jnp.zeros(F, jnp.int32),
+    )
+
+
+def run(spec: SimSpec, seed: int = 0, chunk: int = 2048,
+        stop_flows: np.ndarray | None = None) -> SimResult:
+    """Run the simulation for spec.n_ticks (chunked scans so we can stop
+    early once every flow — or every flow in `stop_flows` — completed)."""
+    step = build_step(spec)
+
+    @jax.jit
+    def run_chunk(carry, t0):
+        ticks = t0 + jnp.arange(chunk, dtype=jnp.int32)
+        carry, _ = jax.lax.scan(step, carry, ticks)
+        return carry
+
+    watch = (np.arange(spec.n_flows) if stop_flows is None
+             else np.asarray(stop_flows))
+    carry = init_carry(spec, seed)
+    t0 = 0
+    while t0 < spec.n_ticks:
+        carry = run_chunk(carry, jnp.int32(t0))
+        t0 += chunk
+        if bool(jnp.all(carry.fct[watch] >= 0)):
+            break
+    return SimResult(
+        fct_ticks=np.asarray(carry.fct),
+        delivered=np.asarray(carry.delivered),
+        trims=np.asarray(carry.trims),
+        timeouts=np.asarray(carry.timeouts),
+        ooo=np.asarray(carry.ooo),
+        retx=np.asarray(carry.retx),
+        done=np.asarray(carry.fct >= 0),
+    )

@@ -1,0 +1,104 @@
+"""Static simulation spec + runtime state containers for the packet sim."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------- LB schemes
+MINIMAL = 0
+VALIANT = 1
+UGAL_L = 2
+ECMP = 3
+FLICR_W = 4
+OPS_U = 5
+OPS_W = 6
+SCOUT = 7       # Spritz-Scout (weighted)
+SPRAY_U = 8     # Spritz-Spray (uniform)
+SPRAY_W = 9     # Spritz-Spray (weighted)
+
+SCHEME_NAMES = {
+    MINIMAL: "minimal", VALIANT: "valiant", UGAL_L: "ugal_l", ECMP: "ecmp",
+    FLICR_W: "flicr_w", OPS_U: "ops_u", OPS_W: "ops_w",
+    SCOUT: "spritz_scout", SPRAY_U: "spritz_spray_u", SPRAY_W: "spritz_spray_w",
+}
+SPRITZ_SCHEMES = (SCOUT, SPRAY_U, SPRAY_W)
+
+# ------------------------------------------------------------- packet states
+P_FREE, P_QUEUED, P_PROP, P_ACKWAIT, P_NACKWAIT, P_LOST = 0, 1, 2, 3, 4, 5
+
+# ------------------------------------------------------------ feedback codes
+# (mirrors repro.core.spritz)
+FB_ACK_OK, FB_ACK_ECN, FB_NACK, FB_TIMEOUT, FB_NONE = 0, 1, 2, 3, 4
+
+
+@dataclasses.dataclass
+class SimSpec:
+    """Host-built static spec: all arrays are NumPy, converted once by run()."""
+
+    name: str
+    scheme: int
+    n_ports: int
+    qsize: int                       # packets per port (1 x BDP)
+    kmin: float                      # ECN RED thresholds (packets)
+    kmax: float
+    n_ticks: int
+    n_pkt: int                       # packet table capacity
+    rto_ticks: int
+    cwnd_init: float                 # 1.5 x BDP (packets)
+    cwnd_max: float
+
+    # flows
+    src_ep: np.ndarray               # [F]
+    dst_ep: np.ndarray               # [F]
+    size_pkts: np.ndarray            # [F]
+    start_tick: np.ndarray           # [F]
+    dep: np.ndarray                  # [F] flow that must complete first (-1 none)
+    bg_mask: np.ndarray              # [F] True => background flow pinned to ECMP
+
+    # per-flow path tables (padded to P_MAX / H_MAX)
+    path_ports: np.ndarray           # [F, P, H] global port id, -1 pad
+    path_len: np.ndarray             # [F, P] hops incl. delivery port
+    path_lat_ns: np.ndarray          # [F, P] Table-I latency (no delivery)
+    n_paths: np.ndarray              # [F]
+    weights: np.ndarray              # [F, P] sampling weights for this scheme
+    valiant_w: np.ndarray            # [F, P] per-hop-uniform Valiant weights
+    static_path: np.ndarray          # [F] ECMP/minimal static choice
+    min_path: np.ndarray             # [F] index of the minimal/static route
+    ret_ticks: np.ndarray            # [F, P] ACK return latency (ticks)
+    rem_ticks: np.ndarray            # [F, P, H] fwd prop remaining from hop h
+    port_lat: np.ndarray             # [n_ports] per-link prop+switch ticks
+    port_failed: np.ndarray          # [n_ports] bool
+
+    # spritz
+    explore_threshold: int = 44
+    ecn_threshold: int = 8
+    min_bias_factor: float = 8.0
+    block_ticks: int = 1 << 18   # timeout-block (§IV-C "global timer"):
+    #   tuned to production failure durations — long relative to experiment
+    #   horizons, so a dead path is probed at most a handful of times
+
+    # flicr
+    flicr_ecn_move: int = 8          # marks on current path before moving
+    flicr_gap: int = 64              # flowlet gap (ticks)
+
+    # cc
+    dctcp_g: float = 1.0 / 16.0
+    quick_adapt: bool = True
+    fast_increase: bool = True
+
+    @property
+    def n_flows(self) -> int:
+        return len(self.src_ep)
+
+
+class SimResult(NamedTuple):
+    fct_ticks: np.ndarray            # [F] completion tick - start (-1 if not done)
+    delivered: np.ndarray            # [F] packets delivered OK
+    trims: np.ndarray                # [F] trimmed (NACKed) packets
+    timeouts: np.ndarray             # [F] timeout events
+    ooo: np.ndarray                  # [F] out-of-order deliveries (PSN skew)
+    retx: np.ndarray                 # [F] retransmissions injected
+    done: np.ndarray                 # [F] bool

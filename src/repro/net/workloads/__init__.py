@@ -1,0 +1,10 @@
+from repro.net.workloads.synthetic import (adversarial, incast_bystanders,
+                                           motivational, permutation)
+from repro.net.workloads.collectives import (allreduce_butterfly,
+                                             allreduce_ring, alltoall)
+from repro.net.workloads.trace import websearch
+
+__all__ = [
+    "permutation", "adversarial", "motivational", "incast_bystanders",
+    "allreduce_ring", "allreduce_butterfly", "alltoall", "websearch",
+]

@@ -1,0 +1,67 @@
+"""Web-search datacenter trace (paper §V-B c).
+
+Flow sizes follow the standard DCTCP web-search distribution (Alizadeh et
+al., SIGCOMM'10 Fig. 5 — the same trace used by the paper via [11], [28]);
+the CDF below is the widely used piecewise-linear form of that measurement.
+Arrivals are Poisson at a configurable load; receivers are picked uniformly
+with a cap on simultaneous senders per receiver (paper: 'randomly select
+receivers while limiting the number of simultaneous senders per receiver').
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.net.sim.build import Flow
+from repro.net.topology.base import LINK_GBPS, TICK_NS
+
+# (bytes, cdf) — DCTCP web-search flow-size distribution
+_WEBSEARCH_CDF = [
+    (6_000, 0.00), (10_000, 0.15), (13_000, 0.20), (19_000, 0.30),
+    (33_000, 0.40), (53_000, 0.53), (133_000, 0.60), (667_000, 0.70),
+    (1_333_000, 0.80), (3_333_000, 0.90), (6_667_000, 0.97),
+    (20_000_000, 1.00),
+]
+
+
+def sample_websearch_bytes(rng: np.random.Generator, n: int) -> np.ndarray:
+    u = rng.uniform(size=n)
+    xs = np.array([b for b, _ in _WEBSEARCH_CDF], dtype=np.float64)
+    cs = np.array([c for _, c in _WEBSEARCH_CDF], dtype=np.float64)
+    return np.interp(u, cs, xs)
+
+
+def mean_websearch_bytes() -> float:
+    xs = np.array([b for b, _ in _WEBSEARCH_CDF])
+    cs = np.array([c for _, c in _WEBSEARCH_CDF])
+    mids = (xs[1:] + xs[:-1]) / 2
+    return float((mids * np.diff(cs)).sum())
+
+
+def websearch(topo, duration_ticks: int, load: float = 1.0, seed: int = 0,
+              max_senders_per_recv: int = 4, max_flows: int | None = None
+              ) -> list[Flow]:
+    """Poisson arrivals sized to `load` x aggregate endpoint bandwidth."""
+    rng = np.random.default_rng(seed)
+    n_eps = topo.n_endpoints
+    mean_b = mean_websearch_bytes()
+    # per-endpoint arrival rate lambda: load * linerate / mean flow size
+    line_bps = LINK_GBPS * 1e9
+    lam_per_tick = load * line_bps * (TICK_NS * 1e-9) / (8 * mean_b) * n_eps
+    n_flows = int(lam_per_tick * duration_ticks)
+    if max_flows is not None:
+        n_flows = min(n_flows, max_flows)
+    starts = np.sort(rng.uniform(0, duration_ticks, n_flows)).astype(np.int64)
+    sizes = np.maximum(1, np.ceil(
+        sample_websearch_bytes(rng, n_flows) / 4096)).astype(np.int64)
+    srcs = rng.integers(0, n_eps, n_flows)
+    recv_load = np.zeros(n_eps, np.int64)
+    flows = []
+    for i in range(n_flows):
+        for _ in range(8):
+            d = int(rng.integers(0, n_eps))
+            if d != int(srcs[i]) and recv_load[d] < max_senders_per_recv:
+                recv_load[d] += 1
+                flows.append(Flow(int(srcs[i]), d, int(sizes[i]),
+                                  start_tick=int(starts[i])))
+                break
+    return flows

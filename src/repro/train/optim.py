@@ -1,0 +1,111 @@
+"""Optimizer substrate: AdamW, LR schedules (cosine + MiniCPM's WSD),
+gradient clipping, and optional int8 error-feedback gradient compression
+(distributed-optimization trick: quantize DP gradients before the
+all-reduce, carry quantization error to the next step).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    step: jnp.ndarray
+    err: dict | None = None   # error-feedback buffers (compression)
+
+
+def adamw_init(params, compression: bool = False) -> AdamWState:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return AdamWState(
+        m=zeros(params), v=zeros(params), step=jnp.zeros((), jnp.int32),
+        err=zeros(params) if compression else None)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, stable: int,
+                 decay: int, floor_frac: float = 0.1):
+    """MiniCPM Warmup-Stable-Decay [arXiv:2404.06395].
+
+    Warmup uses (step + 1) so the very first optimizer step has a nonzero
+    learning rate (step counter is 0-based)."""
+    step = step.astype(jnp.float32)
+    warm = peak_lr * (step + 1.0) / max(warmup, 1)
+    dec_t = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+    dec = peak_lr * (1.0 - (1.0 - floor_frac) * dec_t)
+    return jnp.where(step < warmup, warm,
+                     jnp.where(step < warmup + stable, peak_lr, dec))
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * (step + 1.0) / max(warmup, 1)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x * scale.astype(x.dtype)), grads), g
+
+
+def compress_int8(grads, err):
+    """Per-tensor symmetric int8 quantization with error feedback.
+
+    Returns (quantized-dequantized grads, new error buffers).  Under a DP
+    mesh the all-reduce then moves ~4x fewer meaningful bits (the dequant
+    arrays compress losslessly at the transport layer); here we model the
+    numerics faithfully so convergence effects are real.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127)
+        deq = q * scale
+        return deq.astype(g.dtype), gf - deq
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))
+
+
+def adamw_update(params, grads, state: AdamWState, lr, *,
+                 b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                 max_grad_norm=1.0):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    if state.err is not None:
+        grads, new_err = compress_int8(grads, state.err)
+    else:
+        new_err = None
+    step = state.step + 1
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(new_m, new_v, step, new_err), gnorm

@@ -1,0 +1,119 @@
+"""Loss + train_step / serve_step factories (the functions the dry-run
+lowers and the launcher executes)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import ModelCfg
+from repro.train import optim
+
+
+def xent_loss(logits, labels, vocab_real: int | None = None):
+    """Masked softmax cross-entropy; labels < 0 are ignored.
+
+    The gold logit is extracted with an iota-compare select (elementwise on
+    the model-sharded vocab axis — no one-hot materialization, no gather on
+    a sharded dim); padded vocab positions are masked to -inf."""
+    logits = logits.astype(jnp.float32)
+    pos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, len(logits.shape) - 1)
+    if vocab_real is not None and vocab_real < logits.shape[-1]:
+        logits = jnp.where(pos < vocab_real, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lab = jnp.maximum(labels, 0)
+    gold = jnp.sum(jnp.where(pos == lab[..., None], logits, 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg: ModelCfg, *, remat: bool = True, aux_weight=0.01):
+    def loss_fn(params, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["prefix_embed"] = batch["prefix_embed"]
+        if cfg.family == "encdec":
+            kw["enc_frames"] = batch["enc_frames"]
+        logits, aux = lm.forward(params, cfg, batch["tokens"], remat=remat,
+                                 **kw)
+        if cfg.family == "vlm":  # prefix positions carry no LM loss
+            logits = logits[:, cfg.n_patches:]
+        loss = xent_loss(logits, batch["labels"], cfg.vocab) + aux_weight * aux
+        return loss, {"lm_loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelCfg, *, peak_lr=3e-4, schedule="cosine",
+                    warmup=100, total=10_000, remat=True, microbatch: int = 0):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    microbatch > 0 splits the batch into chunks accumulated with a scan
+    (activation-memory control for train_4k at full model scale)."""
+    loss_fn = make_loss_fn(cfg, remat=remat)
+
+    def grads_of(params, batch):
+        (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, m, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatch and microbatch > 1:
+            def mb(carry, shard):
+                acc, lsum = carry
+                loss, _, g = grads_of(params, shard)
+                return (jax.tree.map(jnp.add, acc, g), lsum + loss), None
+            shards = jax.tree.map(
+                lambda x: x.reshape(microbatch, x.shape[0] // microbatch,
+                                    *x.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(mb, (zero, jnp.float32(0)), shards)
+            grads = jax.tree.map(lambda g: (g / microbatch).astype(jnp.float32), gsum)
+            loss = lsum / microbatch
+        else:
+            loss, _, grads = grads_of(params, batch)
+
+        if schedule == "wsd":
+            lr = optim.wsd_schedule(opt_state.step, peak_lr=peak_lr,
+                                    warmup=warmup, stable=int(total * 0.8),
+                                    decay=int(total * 0.2))
+        else:
+            lr = optim.cosine_schedule(opt_state.step, peak_lr=peak_lr,
+                                       warmup=warmup, total=total)
+        params, opt_state, gnorm = optim.adamw_update(params, grads, opt_state,
+                                                      lr)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm, "lr": lr}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelCfg, max_len: int):
+    """serve prefill: tokens -> (logits of last position, populated cache).
+
+    Implemented as forward + cache write of computed K/V (attention caches
+    only; SSM states come from the recurrent form during decode)."""
+    def prefill(params, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["prefix_embed"] = batch["prefix_embed"]
+        if cfg.family == "encdec":
+            kw["enc_frames"] = batch["enc_frames"]
+        logits, _ = lm.forward(params, cfg, batch["tokens"], remat=False, **kw)
+        return logits[:, -1:]
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelCfg):
+    """One-token decode step with KV/SSM cache (the paper-shape ``decode_*``
+    and ``long_*`` cells lower this)."""
+    def serve_step(params, cache, batch):
+        kw = {}
+        if cfg.family == "encdec":
+            kw["enc_frames"] = batch["enc_frames"]
+        logits, cache = lm.decode_step(params, cfg, batch["tokens"], cache,
+                                       **kw)
+        return logits, cache
+
+    return serve_step

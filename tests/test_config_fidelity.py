@@ -1,0 +1,58 @@
+"""Assigned-architecture configs must match the published specs exactly
+(deliverable f). Sources per config file docstrings."""
+import pytest
+
+from repro import configs as C
+
+SPEC = {  # (layers, d_model, heads, kv, d_ff, vocab)
+    "granite_34b": (88, 6144, 48, 1, 24576, 49152),
+    "qwen2_5_32b": (64, 5120, 40, 8, 27648, 152064),
+    "phi3_medium_14b": (40, 5120, 40, 10, 17920, 100352),
+    "minicpm_2b": (40, 2304, 36, 36, 5760, 122753),
+    "deepseek_moe_16b": (28, 2048, 16, 16, 1408, 102400),
+    "mixtral_8x7b": (32, 4096, 32, 8, 14336, 32000),
+    "llava_next_34b": (60, 7168, 56, 8, 20480, 64000),
+    "jamba_1_5_large": (72, 8192, 64, 8, 24576, 65536),
+    "whisper_small": (12, 768, 12, 12, 3072, 51865),
+}
+
+MOE = {  # (n_experts, top_k, n_shared)
+    "deepseek_moe_16b": (64, 6, 2),
+    "mixtral_8x7b": (8, 2, 0),
+    "jamba_1_5_large": (16, 2, 0),
+}
+
+
+@pytest.mark.parametrize("arch", list(SPEC))
+def test_exact_config(arch):
+    c = C.get_config(arch)
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff,
+            c.vocab) == SPEC[arch]
+
+
+@pytest.mark.parametrize("arch", list(MOE))
+def test_moe_config(arch):
+    me = C.get_config(arch).moe
+    assert (me.n_experts, me.top_k, me.n_shared) == MOE[arch]
+
+
+def test_rwkv_is_attention_free():
+    c = C.get_config("rwkv6_7b")
+    assert c.family == "rwkv"
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (32, 4096, 14336,
+                                                        65536)
+
+
+def test_jamba_interleave_and_whisper_encdec():
+    j = C.get_config("jamba_1_5_large")
+    assert j.attn_every == 8          # 1 attention : 7 mamba
+    w = C.get_config("whisper_small")
+    assert w.n_enc_layers == 12 and w.family == "encdec"
+
+
+def test_all_archs_have_reduced_variants():
+    for a in C.ARCHS:
+        r = C.get_reduced(a)
+        c = C.get_config(a)
+        assert r.family == c.family
+        assert r.n_layers <= 8 and r.d_model <= 512  # jamba unit = 8 layers

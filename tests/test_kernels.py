@@ -1,0 +1,150 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(0, scale, size=shape), dtype)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,Hq,Hkv,D", [
+    (1, 128, 128, 4, 4, 64),      # MHA
+    (2, 256, 256, 8, 2, 64),      # GQA 4:1
+    (1, 128, 128, 4, 1, 128),     # MQA, d_head 128
+    (2, 128, 384, 4, 2, 64),      # cross-length (decode-ish block)
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_shapes(B, Sq, Sk, Hq, Hkv, D, causal):
+    q = rand((B, Sq, Hq, D))
+    k = rand((B, Sk, Hkv, D))
+    v = rand((B, Sk, Hkv, D))
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                              interpret=True)
+    want = ref.mha_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = rand((1, 128, 4, 64), jnp.bfloat16)
+    k = rand((1, 128, 2, 64), jnp.bfloat16)
+    v = rand((1, 128, 2, 64), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.mha_reference(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_sliding_window():
+    q = rand((1, 256, 4, 64))
+    k = rand((1, 256, 2, 64))
+    v = rand((1, 256, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=True, sliding_window=64,
+                              block_q=64, block_k=64, interpret=True)
+    want = ref.mha_reference(q, k, v, causal=True, sliding_window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_q_offset_decode():
+    # decode block: 1 query at position 300 against 384 cached keys
+    q = rand((2, 128, 4, 64))
+    k = rand((2, 384, 4, 64))
+    v = rand((2, 384, 4, 64))
+    out = ops.flash_attention(q, k, v, causal=True, q_offset=256,
+                              block_q=64, block_k=128, interpret=True)
+    want = ref.mha_reference(q, k, v, causal=True, q_offset=256)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("F,P", [(16, 8), (100, 37), (256, 64), (1000, 128)])
+def test_spritz_select_shapes(F, P):
+    w = jnp.asarray(RNG.uniform(0.0, 3.0, size=(F, P)), jnp.float32)
+    u = jnp.asarray(RNG.uniform(size=F), jnp.float32)
+    front = jnp.asarray(RNG.integers(-1, P, size=F), jnp.int32)
+    cnt = jnp.asarray(RNG.integers(0, 60, size=F), jnp.int32)
+    got = ops.spritz_select(w, u, front, cnt, explore_threshold=44,
+                            block_f=64, interpret=True)
+    want = ref.spritz_select_reference(w, u, front, cnt, explore_threshold=44)
+    for g, wnt in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wnt))
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [
+    (1, 64, 1, 64, 16), (2, 128, 2, 64, 32), (1, 256, 4, 64, 64),
+])
+def test_rwkv6_chunked_shapes(B, S, H, hd, chunk):
+    r = rand((B, S, H, hd), scale=0.5)
+    k = rand((B, S, H, hd), scale=0.5)
+    v = rand((B, S, H, hd), scale=0.5)
+    w = jnp.asarray(RNG.uniform(0.7, 0.999, size=(B, S, H, hd)), jnp.float32)
+    u = rand((H, hd), scale=0.1)
+    s0 = rand((B, H, hd, hd), scale=0.1)
+    y1, sf1 = ops.rwkv6_chunked(r, k, v, w, u, s0, chunk=chunk,
+                                interpret=True)
+    y2, sf2 = ref.rwkv6_reference(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf1), np.asarray(sf2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv6_chunked_strong_decay_stability():
+    # adversarial decay (w near exp(-1)) must not overflow the chunked form
+    B, S, H, hd = 1, 128, 1, 64
+    r = rand((B, S, H, hd), scale=0.5)
+    k = rand((B, S, H, hd), scale=0.5)
+    v = rand((B, S, H, hd), scale=0.5)
+    w = jnp.asarray(RNG.uniform(0.3, 0.6, size=(B, S, H, hd)), jnp.float32)
+    u = rand((H, hd), scale=0.1)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    y1, _ = ops.rwkv6_chunked(r, k, v, w, u, s0, chunk=32, interpret=True)
+    y2, _ = ref.rwkv6_reference(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    assert np.isfinite(np.asarray(y1)).all()
+
+
+@pytest.mark.parametrize("N,P,block", [(512, 32, 128), (2048, 300, 512),
+                                       (1024, 7, 256)])
+@pytest.mark.parametrize("t", [0, 1000])
+def test_red_ecn_shapes(N, P, block, t):
+    eport = jnp.asarray(RNG.integers(0, P + 2, N), jnp.int32)  # incl. trash
+    rank = jnp.asarray(RNG.integers(0, 8, N), jnp.int32)
+    enq = jnp.asarray(RNG.uniform(size=N) < 0.3)
+    unif = jnp.asarray(RNG.uniform(size=N), jnp.float32)
+    tails = jnp.asarray(RNG.integers(0, 200, P), jnp.int32)
+    kw = dict(qsize=88, kmin=17.6, kmax=70.4, n_ports=P)
+    got = ops.red_ecn(eport, rank, enq, unif, tails, t, block_n=block,
+                      interpret=True, **kw)
+    want = ref.red_ecn_reference(eport, rank, enq, unif, tails, t, **kw)
+    for g, wnt in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wnt))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_chunked_dtypes(dtype):
+    B, S, H, hd = 1, 64, 2, 64
+    r = rand((B, S, H, hd), dtype, scale=0.5)
+    k = rand((B, S, H, hd), dtype, scale=0.5)
+    v = rand((B, S, H, hd), dtype, scale=0.5)
+    w = jnp.asarray(RNG.uniform(0.7, 0.999, size=(B, S, H, hd)), dtype)
+    u = rand((H, hd), dtype, scale=0.1)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    f32 = lambda a: a.astype(jnp.float32)
+    y1, _ = ops.rwkv6_chunked(r, k, v, w, u, s0, chunk=16, interpret=True)
+    y2, _ = ref.rwkv6_reference(f32(r), f32(k), f32(v), f32(w), f32(u), s0)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,102 @@
+"""Per-architecture smoke tests (required deliverable f): every assigned
+arch instantiates a REDUCED same-family config and runs one forward +
+train step on CPU asserting shapes + finiteness; decode parity checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.models import lm
+from repro.train import optim
+from repro.train.step import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["prefix_embed"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, cfg.n_patches, cfg.d_model)), cfg.dtype)
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jnp.asarray(
+            rng.normal(0, 1, (B, 24, cfg.d_model)), cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = C.get_reduced(arch)
+    assert cfg.family == C.get_config(arch).family
+    params = lm.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    kw = {k: batch[k] for k in ("prefix_embed", "enc_frames") if k in batch}
+    logits, aux = lm.forward(params, cfg, batch["tokens"], **kw)
+    S_out = 16 + (cfg.n_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, S_out, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    step = make_train_step(cfg, total=10, warmup=1)
+    opt = optim.adamw_init(params)
+    params2, opt2, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(opt2.step) == 1
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ["granite_34b", "mixtral_8x7b",
+                                  "jamba_1_5_large", "rwkv6_7b",
+                                  "whisper_small"])
+def test_decode_matches_forward(arch):
+    """Prefill-vs-decode parity: step-by-step decode logits must match the
+    teacher-forced forward logits at every position.
+
+    MoE archs are tested with a dropless capacity factor: GShard-style
+    capacity dropping is a *training-time* behaviour that depends on the
+    number of tokens routed together, so teacher-forced forward (T tokens)
+    and one-token decode legitimately differ when an expert overflows."""
+    import dataclasses
+    cfg = C.get_reduced(arch)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=float(cfg.moe.n_experts)))
+    params = lm.init_params(KEY, cfg)
+    B, S = 1, 8
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_frames"] = jnp.asarray(rng.normal(0, 1, (B, 12, cfg.d_model)),
+                                       cfg.dtype)
+    full, _ = lm.forward(params, cfg, toks, remat=False, **kw)
+
+    cache = lm.init_cache(cfg, batch=B, max_len=S)
+    outs = []
+    for i in range(S):
+        lg, cache = lm.decode_step(params, cfg, toks[:, i:i + 1], cache, **kw)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full, np.float32),
+        rtol=3e-2, atol=3e-2)
+
+
+def test_moe_aux_loss_nonzero_and_balanced_router_low():
+    cfg = C.get_reduced("deepseek_moe_16b")
+    params = lm.init_params(KEY, cfg)
+    _, aux = lm.forward(params, cfg, _batch(cfg)["tokens"])
+    assert float(aux) > 0.0
+
+
+def test_vocab_padding_is_transparent():
+    cfg = C.get_reduced("minicpm_2b")
+    assert cfg.vocab_padded % 256 == 0
+    assert cfg.vocab_padded >= cfg.vocab

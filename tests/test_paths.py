@@ -1,0 +1,102 @@
+"""SGAR path-layer tests: Table I reproduction + bounded-simple-path
+properties (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.net import paths as P
+from repro.net.topology.base import GLOBAL, LOCAL
+from repro.net.topology.dragonfly import make_dragonfly
+from repro.net.topology.slimfly import make_slimfly
+
+DF = make_dragonfly(4, 2, 2)
+SF = make_slimfly(5, p=2)
+DF_FULL = make_dragonfly(8, 4, 4)
+
+
+def test_table1_latencies():
+    # hop-latency model: local 108.2 ns, global 583.2 ns (Table I)
+    assert abs(P.hop_latency_ns(LOCAL) - 108.2) < 0.05
+    assert abs(P.hop_latency_ns(GLOBAL) - 583.2) < 0.05
+    # DF worst bounded path (3L, 2G) = 1491.0 ns
+    assert abs(P.max_path_latency_ns(DF_FULL) - 1491.0) < 0.1
+    # SF worst bounded path (0L, 4G) = 2332.8 ns
+    assert abs(P.max_path_latency_ns(SF) - 2332.8) < 0.1
+
+
+def test_df_path_classes_within_table1():
+    table1_df = {(1, 0), (2, 0), (0, 1), (1, 1), (2, 1), (0, 2), (1, 2),
+                 (2, 2), (3, 2), (3, 1), (3, 0)}
+    t = P.build_ev_table(DF_FULL, 0, 43)
+    for nl, ng in zip(t.n_local, t.n_global):
+        assert (int(nl), int(ng)) in table1_df
+        assert nl <= 3 and ng <= 2
+
+
+def test_ev_table_sorted_and_weighted():
+    t = P.build_ev_table(DF_FULL, 0, 100)
+    assert (np.diff(t.latency_ns) >= 0).all()       # latency ascending
+    w = t.weights(1.0)
+    assert abs(w[-1] - 1.0) < 1e-9                  # longest path weight 1.0
+    assert (np.diff(w) <= 1e-9).all()               # monotone non-increasing
+    w3 = t.weights(3.0)
+    assert abs(w3[-1] - 1.0) < 1e-9                 # scaling keeps longest at 1
+    assert w3[0] >= w[0]
+
+
+def _check_paths(topo, src, dst):
+    paths = P.enumerate_paths(topo, src, dst)
+    seen = set()
+    for hops in paths:
+        walk = [src] + hops
+        assert hops[-1] == dst
+        assert len(set(walk)) == len(walk), "not simple"
+        for u, v in zip(walk, walk[1:]):
+            assert (u, v) in topo.slot_of_edge, "not a link"
+        nl, ng = P.path_class(topo, hops, src)
+        assert P.within_bounds(topo, nl, ng)
+        assert tuple(hops) not in seen, "duplicate path"
+        seen.add(tuple(hops))
+    # default static route must be reachable (EV 0-ish)
+    assert tuple(topo.static_route(src, dst)) in seen
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_path_properties_dragonfly(data):
+    src = data.draw(st.integers(0, DF.n_switches - 1))
+    dst = data.draw(st.integers(0, DF.n_switches - 1))
+    if src != dst:
+        _check_paths(DF, src, dst)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_path_properties_slimfly(data):
+    src = data.draw(st.integers(0, SF.n_switches - 1))
+    dst = data.draw(st.integers(0, SF.n_switches - 1))
+    if src != dst:
+        _check_paths(SF, src, dst)
+
+
+def test_df_same_group_never_misroutes_out():
+    # §III-B: same-group traffic must stay inside the group
+    src, dst = 0, 2  # both group 0 in DF(4,2,2)
+    for hops in P.enumerate_paths(DF, src, dst):
+        assert all(DF.sw_group[h] == DF.sw_group[src] for h in hops)
+
+
+def test_max_paths_subsampling_keeps_minimal():
+    t_full = P.build_ev_table(DF_FULL, 0, 100)
+    t_sub = P.build_ev_table(DF_FULL, 0, 100, max_paths=16)
+    assert t_sub.n_paths == 16
+    dmin = (t_full.n_local + t_full.n_global).min()
+    d_sub = t_sub.n_local + t_sub.n_global
+    # all minimal paths survive the FatPaths-style subsetting
+    assert (d_sub == dmin).sum() == (t_full.n_local + t_full.n_global == dmin).sum()
+
+
+def test_fig3_memory_model():
+    # 3 bytes per EV entry x switches x max paths
+    b = P.endpoint_table_bytes(DF_FULL, 200)
+    assert b == 264 * 200 * 3

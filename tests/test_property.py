@@ -1,0 +1,174 @@
+"""Property-based tests (hypothesis) on the system's core invariants:
+Spritz state machine, simulator conservation laws, max-min fairness,
+topology structure, and the MoE dispatch equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spritz as SZ
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+# ----------------------------------------------------------- Spritz core --
+@st.composite
+def spritz_states(draw, F=4, P=8):
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    n_paths = draw(st.integers(2, P))
+    w = np.zeros((F, P), np.float32)
+    w[:, :n_paths] = rng.uniform(0.1, 3.0, (F, n_paths))
+    state = SZ.init_state(jnp.asarray(w))
+    buf = np.full((F, SZ.BUF_SLOTS), -1, np.int64)
+    for f in range(F):
+        k = draw(st.integers(0, SZ.BUF_SLOTS))
+        vals = rng.choice(n_paths, size=k, replace=True)
+        buf[f, :k] = np.sort(vals)
+    state = state._replace(buffer=jnp.asarray(buf, jnp.int32))
+    return state, n_paths
+
+
+@given(spritz_states(), st.integers(0, 2**31 - 1),
+       st.sampled_from([SZ.SCOUT, SZ.SPRAY]))
+def test_send_logic_returns_valid_paths(sp, seed, variant):
+    state, n_paths = sp
+    cfg = SZ.SpritzConfig(variant=variant)
+    rng = jax.random.PRNGKey(seed)
+    t = jnp.int32(10)
+    active = jnp.ones(state.w.shape[0], bool)
+    new_state, ev, explored = SZ.send_logic(state, cfg, rng, t, active)
+    ev = np.asarray(ev)
+    assert (ev >= 0).all() and (ev < n_paths).all()
+    # packet_count never exceeds threshold + 1
+    assert (np.asarray(new_state.packet_count) <=
+            cfg.explore_threshold + 1).all()
+
+
+@given(spritz_states(), st.integers(0, 4), st.integers(0, 2**31 - 1))
+def test_feedback_buffer_stays_consistent(sp, fb_type, seed):
+    """After any feedback: buffer slots are -1 or valid path ids, no slot
+    past the first -1 is occupied (left-compacted for Scout)."""
+    state, n_paths = sp
+    rng = np.random.default_rng(seed)
+    F = state.w.shape[0]
+    cfg = SZ.SpritzConfig(variant=SZ.SCOUT)
+    ev = jnp.asarray(rng.integers(0, n_paths, F), jnp.int32)
+    fb = jnp.full((F,), fb_type, jnp.int32)
+    ecn_rate = jnp.zeros(F)
+    path_lat = jnp.asarray(
+        np.sort(rng.uniform(500, 2000, state.w.shape), axis=1), jnp.float32)
+    new = SZ.feedback_logic(state, cfg, ev, fb, ecn_rate, path_lat,
+                            jnp.int32(100))
+    buf = np.asarray(new.buffer)
+    assert ((buf == -1) | ((buf >= 0) & (buf < state.w.shape[1]))).all()
+    # weights stay non-negative and bounded by their originals
+    assert (np.asarray(new.w) >= 0).all()
+    assert (np.asarray(new.w) <= np.asarray(new.w_orig) * 8.01 + 8.01).all()
+
+
+@given(spritz_states(), st.integers(0, 2**31 - 1))
+def test_timeout_blocks_path_until_timer(sp, seed):
+    state, n_paths = sp
+    rng = np.random.default_rng(seed)
+    F = state.w.shape[0]
+    cfg = SZ.SpritzConfig(variant=SZ.SCOUT)
+    ev = jnp.asarray(rng.integers(0, n_paths, F), jnp.int32)
+    fb = jnp.full((F,), SZ.TIMEOUT, jnp.int32)
+    lat = jnp.asarray(np.sort(rng.uniform(500, 2000, state.w.shape), 1),
+                      jnp.float32)
+    t0 = jnp.int32(100)
+    new = SZ.feedback_logic(state, cfg, ev, fb, jnp.zeros(F), lat, t0)
+    w_eff = np.asarray(SZ.effective_weights(new, t0 + 1))
+    evn = np.asarray(ev)
+    assert (w_eff[np.arange(F), evn] == 0).all()
+    # after the block expires the original weight is restored
+    w_later = np.asarray(SZ.effective_weights(
+        new, t0 + cfg.block_ticks + 1))
+    orig = np.asarray(state.w_orig)[np.arange(F), evn]
+    np.testing.assert_allclose(w_later[np.arange(F), evn], orig, rtol=1e-6)
+
+
+# --------------------------------------------------------------- fairness --
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(2, 6))
+def test_maxmin_rates_feasible_and_saturating(seed, n_flows, n_links):
+    """Max-min rates: (1) feasible (per-link sum <= 1+eps); (2) every flow
+    crosses at least one saturated link (max-min optimality witness)."""
+    from repro.fabric.flowsim import _maxmin_rates
+    rng = np.random.default_rng(seed)
+    fl = [np.unique(rng.integers(0, n_links, rng.integers(1, 4)))
+          for _ in range(n_flows)]
+    active = np.ones(n_flows, bool)
+    r = _maxmin_rates(fl, n_links, active)
+    loads = np.zeros(n_links)
+    for f in range(n_flows):
+        loads[fl[f]] += r[f]
+    assert (loads <= 1 + 1e-6).all()
+    assert (r > 0).all()
+    for f in range(n_flows):
+        assert loads[fl[f]].max() > 1 - 1e-6, (f, loads, r)
+
+
+# -------------------------------------------------------------- topology --
+@given(st.sampled_from([(4, 2, 2), (6, 3, 3), (8, 4, 4)]))
+def test_dragonfly_structure(ahp):
+    from repro.net.topology.dragonfly import make_dragonfly
+    a, h, p = ahp
+    topo = make_dragonfly(a, h, p)
+    topo.validate()
+    g = a * h + 1
+    assert topo.n_groups == g
+    assert topo.n_switches == g * a
+    assert topo.n_endpoints == g * a * p
+    # diameter 3: any switch pair within 3 hops
+    assert topo.diameter <= 3
+
+
+@given(st.sampled_from([5, 9]))
+def test_slimfly_structure(q):
+    from repro.net.topology.slimfly import make_slimfly
+    topo = make_slimfly(q)
+    topo.validate()
+    assert topo.n_switches == 2 * q * q
+    assert topo.diameter == 2
+
+
+# ------------------------------------------------------------------- MoE --
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3))
+def test_moe_sort_dispatch_matches_einsum_oracle(seed, top_k):
+    from repro import configs as C
+    from repro.models import moe
+    cfg = C.get_reduced("mixtral_8x7b")
+    me = dataclasses.replace(cfg.moe, top_k=top_k)
+    cfg = dataclasses.replace(cfg, moe=me, dtype=jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    p = moe.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model),
+                          jnp.float32)
+    o1, _ = moe._apply_moe_dense(p, x, cfg)
+    o2, _ = moe._apply_moe_dense_einsum(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ rwkv --
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16]))
+def test_rwkv_chunked_matches_sequential(seed, chunk):
+    from repro.kernels import ref
+    from repro.models import ssm
+    rng = np.random.default_rng(seed)
+    B, S, Hh, hd = 1, 32, 2, 8
+    r, k, v = [jnp.asarray(rng.normal(0, 1, (B, S, Hh, hd)), jnp.float32)
+               for _ in range(3)]
+    w = jnp.asarray(rng.uniform(0.05, 0.999, (B, S, Hh, hd)), jnp.float32)
+    u = jnp.asarray(rng.normal(0, 1, (Hh, hd)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(0, 0.5, (B, Hh, hd, hd)), jnp.float32)
+    y_ref, s_ref = ref.rwkv6_reference(r, k, v, w, u, s0)
+    y, s = ssm.rwkv6_chunked_jnp(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=5e-4, atol=5e-4)

@@ -1,0 +1,81 @@
+"""End-to-end behaviour tests for the paper's system: the qualitative
+claims a reviewer would check (scheme orderings, failure resilience,
+paper-calibrated latency constants)."""
+import numpy as np
+import pytest
+
+from repro.net.sim import build as B
+from repro.net.sim import engine as E
+from repro.net.sim.types import (ECMP, MINIMAL, SCHEME_NAMES, SCOUT, SPRAY_U,
+                                 SPRAY_W, UGAL_L, VALIANT)
+from repro.net.topology.dragonfly import make_dragonfly
+from repro.net.workloads import adversarial, motivational, permutation
+
+TOPO = make_dragonfly(4, 2, 2)
+
+
+def _run(flows, scheme, failed=None, stop=None, n_ticks=1 << 16):
+    spec = B.build_spec(TOPO, flows, scheme, n_ticks=n_ticks,
+                        failed_links=failed or [])
+    return E.run(spec, stop_flows=stop)
+
+
+def test_adversarial_spray_beats_minimal_and_fewest_trims():
+    """Fig. 6 ordering: minimal collapses on adversarial traffic; Spritz-
+    Spray completes faster with fewer drops (paper: fewest in 3/4 cases)."""
+    flows = adversarial(TOPO, size_pkts=384)
+    r_min = _run(flows, MINIMAL)
+    r_spray = _run(flows, SPRAY_U)
+    assert r_min.done.all() and r_spray.done.all()
+    assert r_spray.fct_ticks.mean() < r_min.fct_ticks.mean()
+    assert r_spray.trims.sum() < r_min.trims.sum()
+
+
+def test_motivational_spritz_beats_ugal():
+    """Table III at reduced scale: Spritz finds the free groups that
+    UGAL-L's local-only view cannot see.  The paper reports 1.8x at 1056
+    endpoints; at a=4 scale (9 groups, 2 free) the ratio compresses —
+    we assert the ordering plus >=1.15x for Scout (the paper's best
+    variant), which reduced-scale sweeps land at ~1.25x (EXPERIMENTS.md
+    §Paper-validation)."""
+    flows, mi = motivational(TOPO, 1024, bg_pkts=1 << 13,
+                             n_free_groups=2, bg_flows_per_ep=5,
+                             warmup_ticks=1024)
+    stop = np.array([mi])
+    f_ugal = _run(flows, UGAL_L, stop=stop, n_ticks=1 << 18).fct_ticks[mi]
+    f_scout = _run(flows, SCOUT, stop=stop, n_ticks=1 << 18).fct_ticks[mi]
+    assert f_scout > 0 and f_ugal > 0
+    assert f_ugal > 1.15 * f_scout
+
+
+def test_failures_spritz_completes_with_few_timeouts():
+    """§V-D: under failed links Spritz quickly blocks dead paths; static
+    schemes suffer (ECMP flows crossing the dead link never adapt)."""
+    rng = np.random.default_rng(0)
+    # fail 2 random global links
+    links = [(s, int(TOPO.nbr[s, r])) for s in range(TOPO.n_switches)
+             for r in range(TOPO.radix)
+             if TOPO.nbr[s, r] >= 0 and TOPO.nbr_type[s, r] == 1]
+    failed = [links[i] for i in rng.choice(len(links), 2, replace=False)]
+    flows = permutation(TOPO, size_pkts=128, seed=3)
+    r_spray = _run(flows, SPRAY_W, failed=failed, n_ticks=1 << 17)
+    assert r_spray.done.all()
+    r_ecmp = _run(flows, ECMP, failed=failed, n_ticks=1 << 17)
+    # ECMP cannot re-route: flows pinned onto dead links time out repeatedly
+    # (Spritz pays ~one RTO per dead path before w_i=0 blocks it — detection
+    # latency is protocol-inherent — then never re-probes within the run;
+    # measured ratio 2.83x at this scale, plus ECMP leaves flows unfinished)
+    assert r_ecmp.timeouts.sum() > 2.5 * r_spray.timeouts.sum()
+    spray_done_t = r_spray.fct_ticks.max()
+    assert (~r_ecmp.done).any() or r_ecmp.fct_ticks.max() > 2 * spray_done_t
+
+
+def test_solo_fct_calibration_full_scale():
+    """Paper Table III solo FCT = 91 us for a 4 MiB flow on full-scale DF;
+    our latency model lands within 5%."""
+    topo = make_dragonfly(8, 4, 4)
+    flows, mi = motivational(topo, B.mib_to_pkts(4.0), 0, solo=True)
+    spec = B.build_spec(topo, flows, MINIMAL, n_ticks=1 << 15)
+    res = E.run(spec, stop_flows=np.array([mi]))
+    fct_us = float(B.ticks_to_us(res.fct_ticks[mi]))
+    assert abs(fct_us - 91.0) / 91.0 < 0.05

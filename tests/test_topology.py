@@ -1,0 +1,102 @@
+"""Topology structure tests: paper Table II instances + invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.net.topology.base import GLOBAL, LOCAL
+from repro.net.topology.dragonfly import make_dragonfly
+from repro.net.topology.gf import GF
+from repro.net.topology.slimfly import make_slimfly
+
+
+def test_dragonfly_paper_scale():
+    topo = make_dragonfly(8, 4, 4)
+    assert topo.n_switches == 264          # Table II
+    assert topo.n_endpoints == 1056
+    assert topo.n_groups == 33
+    assert topo.diameter == 3
+    assert topo.bdp_packets() == 88
+
+
+def test_slimfly_paper_scale():
+    topo = make_slimfly(9)
+    assert topo.n_switches == 162          # Table II
+    assert topo.n_endpoints == 1134
+    assert topo.diameter == 2
+    assert topo.params["net_radix"] == 13  # (3q-1)/2
+    assert topo.bdp_packets() == 92
+
+
+@pytest.mark.parametrize("a,h,p", [(4, 2, 2), (6, 3, 3), (8, 4, 4)])
+def test_dragonfly_structure(a, h, p):
+    topo = make_dragonfly(a, h, p)
+    g = a * h + 1
+    assert topo.n_groups == g
+    # every pair of groups connected by exactly one global link
+    cnt = np.zeros((g, g), int)
+    for s in range(topo.n_switches):
+        for r in range(topo.radix):
+            t = int(topo.nbr[s, r])
+            if t >= 0 and topo.nbr_type[s, r] == GLOBAL:
+                cnt[topo.sw_group[s], topo.sw_group[t]] += 1
+    off = cnt[~np.eye(g, dtype=bool)]
+    assert (off == 1).all()
+    assert np.diag(cnt).sum() == 0
+    # local all-to-all within each group
+    for s in range(topo.n_switches):
+        locs = [int(topo.nbr[s, r]) for r in range(topo.radix)
+                if topo.nbr[s, r] >= 0 and topo.nbr_type[s, r] == LOCAL]
+        assert len(locs) == a - 1
+        assert all(topo.sw_group[t] == topo.sw_group[s] for t in locs)
+
+
+@pytest.mark.parametrize("q", [5, 9, 13])
+def test_slimfly_structure(q):
+    topo = make_slimfly(q, p=2)
+    assert topo.n_switches == 2 * q * q
+    assert topo.diameter == 2
+    # regular network degree k' = (3q-1)/2
+    deg = (topo.nbr >= 0).sum(1)
+    assert (deg == (3 * q - 1) // 2).all()
+    # undirected symmetry
+    for s in range(topo.n_switches):
+        for r in range(topo.radix):
+            t = int(topo.nbr[s, r])
+            if t >= 0:
+                assert s in topo.nbr[t]
+
+
+@pytest.mark.parametrize("q", [4, 5, 8, 9, 13, 25])
+def test_gf_field_axioms(q):
+    gf = GF(q)
+    # multiplicative group order q-1 via primitive element
+    x, seen = gf.primitive, set()
+    v = 1
+    for _ in range(q - 1):
+        v = gf.mul(v, x)
+        seen.add(v)
+    assert len(seen) == q - 1 and 1 in seen
+    # distributivity spot check
+    rng = np.random.default_rng(q)
+    for _ in range(20):
+        a, b, c = rng.integers(0, q, 3)
+        lhs = gf.mul(int(a), gf.add(int(b), int(c)))
+        rhs = gf.add(gf.mul(int(a), int(b)), gf.mul(int(a), int(c)))
+        assert lhs == rhs
+
+
+@settings(max_examples=10, deadline=None)
+@given(a=st.integers(2, 6), h=st.integers(1, 3))
+def test_dragonfly_property(a, h):
+    topo = make_dragonfly(a, h, 2)
+    # diameter <= 3 always (l-g-l worst case)
+    assert topo.diameter <= 3
+    # static routes follow shortest-path distances
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        s, d = rng.integers(0, topo.n_switches, 2)
+        if s == d:
+            continue
+        hops = topo.static_route(int(s), int(d))
+        assert len(hops) == topo.dist[s, d]
+        assert hops[-1] == d

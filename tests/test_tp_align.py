@@ -1,0 +1,92 @@
+"""TP head alignment (models/tp_align.py): the padded model must be
+function-equivalent to the exact config, for both replication (tp % n_kv
+== 0) and dead-head padding, across the awkward-head assigned archs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.models import lm, tp_align
+from repro.models.common import ModelCfg
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("heads,kv,tp", [
+    (40, 8, 16),    # qwen:   kv replication r=2 + 1 dead q per group
+    (40, 10, 16),   # phi3:   dead-kv padding to 16
+    (36, 36, 16),   # minicpm: MHA pad to 48
+    (56, 8, 16),    # llava:  r=2, G 7 -> 4 (1 dead q / copy-group)
+    (48, 1, 16),    # granite-like MQA: r=16 replication
+    (12, 12, 16),   # whisper: pad to 16
+    (32, 8, 4),     # already aligned: noop
+])
+def test_plan_shapes(heads, kv, tp):
+    pl = tp_align.plan(heads, kv, tp)
+    assert pl["n_kv"] % tp == 0 or pl["noop"]
+    assert pl["n_heads"] % tp == 0 or pl["noop"]
+    assert pl["n_heads"] == pl["n_kv"] * pl["G"] or pl["noop"]
+    # every live q head appears exactly once
+    live = [s for s in pl["q_src"] if s >= 0]
+    assert sorted(live) == list(range(heads))
+
+
+@pytest.mark.parametrize("heads,kv", [(40, 8), (40, 10), (36, 36), (56, 8),
+                                      (48, 1)])
+def test_forward_equivalence(heads, kv):
+    d_head = 16
+    cfg = ModelCfg(name="t", family="dense", n_layers=2, d_model=64,
+                   n_heads=heads, n_kv=kv, d_ff=128, vocab=256,
+                   d_head=d_head, dtype=jnp.float32)
+    cfg_pad = tp_align.aligned(cfg, tp=16)
+    assert cfg_pad.n_heads % 16 == 0 and cfg_pad.n_kv % 16 == 0
+
+    params = lm.init_params(KEY, cfg)
+    params_pad = lm.init_params(KEY, cfg_pad)
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 256, (2, 8)),
+                       jnp.int32)
+    y, _ = lm.forward(params, cfg, toks, remat=False)
+    y_pad, _ = lm.forward(params_pad, cfg_pad, toks, remat=False)
+    np.testing.assert_allclose(np.asarray(y_pad), np.asarray(y),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_equivalence_with_padded_cache():
+    cfg = ModelCfg(name="t", family="dense", n_layers=2, d_model=64,
+                   n_heads=40, n_kv=8, d_ff=128, vocab=256, d_head=16,
+                   dtype=jnp.float32)
+    cfg_pad = tp_align.aligned(cfg, tp=16)
+    params = lm.init_params(KEY, cfg)
+    params_pad = lm.init_params(KEY, cfg_pad)
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, 256, (1, 6)),
+                       jnp.int32)
+    cache = lm.init_cache(cfg, 1, 6)
+    cache_p = lm.init_cache(cfg_pad, 1, 6)
+    assert cache_p["layers"][0]["kv"]["k"].shape[3] == cfg_pad.n_kv
+    for i in range(6):
+        lg, cache = lm.decode_step(params, cfg, toks[:, i:i + 1], cache)
+        lgp, cache_p = lm.decode_step(params_pad, cfg_pad, toks[:, i:i + 1],
+                                      cache_p)
+        np.testing.assert_allclose(np.asarray(lgp), np.asarray(lg),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_dead_heads_receive_zero_gradient():
+    cfg = ModelCfg(name="t", family="dense", n_layers=1, d_model=32,
+                   n_heads=5, n_kv=5, d_ff=64, vocab=128, d_head=8,
+                   dtype=jnp.float32)
+    cfg_pad = tp_align.aligned(cfg, tp=8)  # pad 5 -> 8 heads
+    params = lm.init_params(KEY, cfg_pad)
+    toks = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+
+    def loss(p):
+        y, _ = lm.forward(p, cfg_pad, toks, remat=False)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    g = jax.grad(loss)(params)
+    gw = g["blocks"][0]["attn"]["wq"][0]  # [d, Hq*dh]
+    dead = np.asarray(gw.reshape(32, 8, 8)[:, 5:, :])
+    np.testing.assert_allclose(dead, 0.0, atol=1e-6)

@@ -1,0 +1,171 @@
+"""Engine performance benchmark: event-compression + batched driver.
+
+Measures the packet engine on the ``bench_micro`` quick configuration
+(small Dragonfly, adversarial workload, 512-pkt flows, 1<<17-tick budget)
+and writes ``BENCH_engine.json`` at the repo root so the perf trajectory
+is tracked from this PR onward:
+
+* compressed vs dense-reference wall time (cold = incl. compile, warm =
+  steady state) per scheme, with the steps-executed / ticks-simulated
+  compression ratio;
+* device steps/s and delivered packets/s;
+* the full 10-scheme batched sweep through ``run_schemes`` (one compile);
+* optionally (``--seed-rev REV``) the same cells on the engine of an
+  older git revision, giving an apples-to-apples speedup (the committed
+  JSON records the seed engine of commit v0).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_engine [--seed-rev fc87b58]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _quick_cell():
+    from repro.net.sim import build as B
+    from repro.net.sim.types import ECMP, SPRAY_W
+    from repro.net.topology.dragonfly import make_dragonfly
+    from repro.net.workloads import adversarial
+
+    topo = make_dragonfly(4, 2, 2)
+    flows = adversarial(topo, size_pkts=512, seed=1)
+
+    def spec_for(scheme):
+        return B.build_spec(topo, flows, scheme, n_ticks=1 << 17,
+                            n_pkt_cap=1 << 17)
+
+    return topo, flows, spec_for, (ECMP, SPRAY_W)
+
+
+def _time_run(run_fn, spec, **kw):
+    t0 = time.time()
+    res = run_fn(spec, **kw)
+    cold = time.time() - t0
+    t0 = time.time()
+    res = run_fn(spec, **kw)
+    warm = time.time() - t0
+    return res, cold, warm
+
+
+def _engine_cells(engine, spec_for, schemes, *, reference_too: bool,
+                  label: str):
+    from repro.net.sim.types import SCHEME_NAMES
+    out = {}
+    for scheme in schemes:
+        spec = spec_for(scheme)
+        cell = {}
+        res, cold, warm = _time_run(engine.run, spec)
+        cell.update(
+            wall_s_cold=round(cold, 2), wall_s_warm=round(warm, 2),
+            steps_executed=int(getattr(res, "steps_executed", -1)),
+            ticks_simulated=int(getattr(res, "ticks_simulated", -1)),
+            delivered_pkts=int(res.delivered.sum()),
+            done_frac=float(res.done.mean()),
+        )
+        if cell["steps_executed"] > 0:
+            cell["compression"] = round(
+                cell["ticks_simulated"] / cell["steps_executed"], 3)
+            cell["steps_per_s"] = round(cell["steps_executed"] / warm, 1)
+            cell["delivered_pkts_per_s"] = round(
+                cell["delivered_pkts"] / warm, 1)
+        if reference_too:
+            _, _, ref_warm = _time_run(engine.run, spec, reference=True)
+            cell["wall_s_dense_warm"] = round(ref_warm, 2)
+            cell["speedup_vs_dense"] = round(ref_warm / warm, 2)
+        out[SCHEME_NAMES[scheme]] = cell
+        print(f"  [{label}] {SCHEME_NAMES[scheme]}: {cell}", flush=True)
+    return out
+
+
+def _load_rev_engine(rev: str):
+    """Materialize ``src/repro/net/sim/engine.py`` of ``rev`` as a module
+    (against the *current* types/build/spritz — their engine-facing API is
+    backwards compatible)."""
+    src = subprocess.check_output(
+        ["git", "show", f"{rev}:src/repro/net/sim/engine.py"],
+        cwd=REPO_ROOT, text=True)
+    with tempfile.NamedTemporaryFile("w", suffix="_engine.py",
+                                     delete=False) as f:
+        f.write(src)
+        path = f.name
+    mspec = importlib.util.spec_from_file_location(f"engine_{rev}", path)
+    mod = importlib.util.module_from_spec(mspec)
+    mspec.loader.exec_module(mod)
+    return mod
+
+
+def run(scale: str = "small", out_dir: Path = Path("results/bench"),
+        seed_rev: str | None = None, quick: bool = False):
+    del scale, quick  # one canonical configuration: the micro quick cell
+    from benchmarks.common import ALL_SCHEMES, run_schemes
+    from repro.net.sim import engine as E
+
+    topo, flows, spec_for, schemes = _quick_cell()
+    print(f"[engine] quick cell: {topo.name}, {len(flows)} flows x 512 pkts",
+          flush=True)
+
+    report = {
+        "config": {
+            "topology": topo.name, "workload": "adversarial",
+            "n_flows": len(flows), "size_pkts": 512,
+            "n_ticks": 1 << 17, "n_pkt_cap": 1 << 17,
+        },
+        "engine": _engine_cells(E, spec_for, schemes, reference_too=True,
+                                label="current"),
+    }
+
+    t0 = time.time()
+    rows = run_schemes(topo, flows, ALL_SCHEMES, n_ticks=1 << 17,
+                       spec_kw=dict(n_pkt_cap=1 << 17), verbose=False)
+    report["batched_sweep"] = {
+        "schemes": len(ALL_SCHEMES),
+        "wall_s_cold": round(time.time() - t0, 2),
+        "max_steps": max(r.steps_executed for _, r in rows),
+        "note": "one compile + one vmapped while_loop for all schemes",
+    }
+    print(f"  [batched] {report['batched_sweep']}", flush=True)
+
+    if seed_rev:
+        old = _load_rev_engine(seed_rev)
+        report["baseline"] = {
+            "rev": seed_rev,
+            "engine": _engine_cells(old, spec_for, schemes,
+                                    reference_too=False,
+                                    label=f"rev {seed_rev}"),
+        }
+        for name, cell in report["engine"].items():
+            base = report["baseline"]["engine"].get(name, {})
+            if base.get("wall_s_warm"):
+                cell["speedup_vs_baseline"] = round(
+                    base["wall_s_warm"] / cell["wall_s_warm"], 2)
+
+    out = REPO_ROOT / "BENCH_engine.json"
+    out.write_text(json.dumps(report, indent=1))
+    print(f"[engine] wrote {out}", flush=True)
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / "engine.json").write_text(json.dumps(report, indent=1))
+    return [dict(topology=topo.name, scheme=name, **cell)
+            for name, cell in report["engine"].items()]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed-rev", default=None,
+                    help="git rev whose engine to benchmark as baseline")
+    args = ap.parse_args()
+    run(seed_rev=args.seed_rev)
+    sys.exit(0)

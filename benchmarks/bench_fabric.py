@@ -40,6 +40,22 @@ def run(scale: str, out_dir: Path, quick: bool = False):
         ecmp = rep.get("ecmp", {}).get("fct_us", float("nan"))
         print(f"   [{arch}] ecmp {ecmp:.0f} us -> spritz {best_sp:.0f} us "
               f"({ecmp/best_sp:.2f}x)", flush=True)
+
+    # packet-level refinement at reduced scale: the same bridge lowered
+    # onto the exact simulator, whole scheme sweep as one batched program
+    # (engine.run_batch; DESIGN.md §5)
+    small = make_dragonfly(4, 2, 2)
+    rep = bridge.fabric_report(small, "train", 2e6,
+                               schemes=(FL_ECMP, FL_UGAL, FL_SPRITZ_W),
+                               n_chips=32, tp=4, packet_level=True)
+    for scheme, v in rep.items():
+        rows.append({"topology": small.name, "workload": "pkt_refine",
+                     "scheme": scheme, "shard_MB": 2.0,
+                     "coll_duration_us": round(v["fct_us"], 1),
+                     "trims": v["trims"],
+                     "compression": v["compression"]})
+    summary = {k: round(v["fct_us"]) for k, v in rep.items()}
+    print(f"   [pkt_refine] {summary}", flush=True)
     write_csv(out_dir / "fabric.csv", rows)
     return rows
 

@@ -56,18 +56,19 @@ def main() -> None:
                     choices=["quick", "small", "mid", "full"])
     ap.add_argument("--only", default=None,
                     help="comma list: motivational,micro,collectives,"
-                         "incast,trace,failures,memory,kernels")
+                         "incast,trace,failures,memory,kernels,engine")
     ap.add_argument("--out", default="results/bench")
     args = ap.parse_args()
     out = Path(args.out)
     quick = args.scale == "quick"
     scale = "small" if quick else args.scale
 
-    from benchmarks import (bench_collectives, bench_fabric, bench_failures,
-                            bench_incast, bench_memory, bench_micro,
-                            bench_motivational, bench_trace)
+    from benchmarks import (bench_collectives, bench_engine, bench_fabric,
+                            bench_failures, bench_incast, bench_memory,
+                            bench_micro, bench_motivational, bench_trace)
     suites = {
         "memory": lambda: bench_memory.run(scale, out),
+        "engine": lambda: bench_engine.run(scale, out),
         "motivational": lambda: bench_motivational.run(scale, out, quick=quick),
         "micro": lambda: bench_micro.run(scale, out, quick=quick),
         "collectives": lambda: bench_collectives.run(scale, out, quick=quick),

@@ -21,12 +21,16 @@ print(f"[1] Dragonfly a=4 h=2 p=2: {topo.n_endpoints} endpoints, "
       f"{topo.n_switches} switches, BDP={topo.bdp_packets()} pkts")
 
 flows = adversarial(topo, size_pkts=256)
-for scheme in (MINIMAL, SPRAY_W):
-    spec = B.build_spec(topo, flows, scheme, n_ticks=1 << 16)
-    res = E.run(spec)
+# one batched program for the whole scheme sweep: compiles once, each
+# scheme a vmapped lane (DESIGN.md §5)
+schemes = [MINIMAL, SPRAY_W]
+base = B.build_spec(topo, flows, SPRAY_W, n_ticks=1 << 16)
+for scheme, res in zip(schemes, E.run_batch(base, schemes=schemes)):
     fct = B.ticks_to_us(res.fct_ticks[res.done])
     print(f"    {SCHEME_NAMES[scheme]:14s} mean FCT {fct.mean():8.1f} us   "
-          f"trims {res.trims.sum():5d}")
+          f"trims {res.trims.sum():5d}   "
+          f"({res.steps_executed} steps for {res.ticks_simulated} ticks, "
+          f"x{res.compression:.1f} event compression)")
 
 # ----------------------------------------------------- 2. a reduced LM arch
 import jax

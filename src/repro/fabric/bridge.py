@@ -24,7 +24,20 @@ import dataclasses
 import numpy as np
 
 from repro.fabric import flowsim as FS
-from repro.net.topology.base import LINK_GBPS, Topology
+from repro.net.topology.base import LINK_GBPS, TICK_NS, Topology
+
+# flow-level scheme ids -> packet-level scheme ids (for packet_level mode)
+_FL_TO_PKT = None
+
+
+def _fl_to_pkt():
+    global _FL_TO_PKT
+    if _FL_TO_PKT is None:
+        from repro.net.sim import types as T
+        _FL_TO_PKT = {FS.FL_MINIMAL: T.MINIMAL, FS.FL_ECMP: T.ECMP,
+                      FS.FL_VALIANT: T.VALIANT, FS.FL_UGAL: T.UGAL_L,
+                      FS.FL_SPRITZ: T.SPRAY_U, FS.FL_SPRITZ_W: T.SPRAY_W}
+    return _FL_TO_PKT
 
 
 @dataclasses.dataclass
@@ -138,21 +151,63 @@ def cell_collectives(topo: Topology, kind: str, shard_bytes: float,
 
 def fabric_report(topo: Topology, kind: str, shard_bytes: float,
                   schemes=(FS.FL_ECMP, FS.FL_UGAL, FS.FL_SPRITZ_W),
-                  n_chips: int = 256, tp: int = 16, seed: int = 0) -> dict:
+                  n_chips: int = 256, tp: int = 16, seed: int = 0,
+                  packet_level: bool = False,
+                  n_ticks: int = 1 << 18) -> dict:
     """Full bridge: embed, expand, simulate each scheme; returns
-    {scheme_name: max fct_us over the concurrent collectives}."""
+    {scheme_name: max fct_us over the concurrent collectives}.
+
+    ``packet_level=True`` lowers the collective flow set onto the exact
+    packet simulator instead of the flow-level max-min model and runs the
+    whole scheme sweep as ONE batched device program via
+    ``engine.run_batch`` (compiles once; see DESIGN.md §5).  This refines
+    the flow-level estimate with queueing, trimming and CC dynamics, at
+    packet-level cost — use it at reduced topology scales.
+    """
     emb = embed_mesh(topo, n_chips, tp)
     specs = cell_collectives(topo, kind, shard_bytes, n_chips, tp, emb)
     # all rings run concurrently: simulate their union as one flow set
+    flows = []
+    for sp in specs:
+        flows.extend(_EXPAND[sp.kind](sp.participants, sp.bytes_per_rank))
+    if packet_level:
+        return _packet_report(topo, flows, schemes, seed, n_ticks)
     out = {}
     for scheme in schemes:
-        flows = []
-        for sp in specs:
-            flows.extend(_EXPAND[sp.kind](sp.participants, sp.bytes_per_rank))
         res = FS.simulate(topo, flows, scheme, seed=seed)
         done = res.fct[res.fct > 0]
         t_bytes = float(done.max()) if len(done) else float("nan")
         out[FS.FL_NAMES[scheme]] = {
             "fct_us": t_bytes / (LINK_GBPS / 8 * 1e3),
             "reselections": res.reselections}
+    return out
+
+
+def _packet_report(topo: Topology, flows: list[FS.FlowSpec], schemes,
+                   seed: int, n_ticks: int) -> dict:
+    """Exact packet-level scheme sweep over one collective flow set,
+    batched through ``engine.run_batch``."""
+    from repro.net.sim import build as B
+    from repro.net.sim import engine as E
+    from repro.net.sim.types import SPRAY_W
+    # flow-level time is in bytes at link rate; 1 tick serializes one
+    # 4160 B packet, so start offsets convert at bytes/4160 per tick
+    sim_flows = [B.Flow(f.src_ep, f.dst_ep,
+                        max(1, int(np.ceil(f.size_bytes / 4096))),
+                        start_tick=int(round(f.start / 4160)))
+                 for f in flows]
+    pkt_schemes = [_fl_to_pkt()[s] for s in schemes]
+    base = B.build_spec(topo, sim_flows, SPRAY_W, n_ticks=n_ticks, seed=seed)
+    results = E.run_batch(base, schemes=pkt_schemes, seeds=[seed])
+    out = {}
+    for fl_scheme, res in zip(schemes, results):
+        done = res.fct_ticks[res.done]
+        fct_us = (float(done.max()) * TICK_NS / 1e3) if len(done) else \
+            float("nan")
+        out[FS.FL_NAMES[fl_scheme]] = {
+            "fct_us": fct_us,
+            "done_frac": float(res.done.mean()),
+            "trims": int(res.trims.sum()),
+            "steps": res.steps_executed,
+            "compression": round(res.compression, 2)}
     return out

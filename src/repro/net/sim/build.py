@@ -173,6 +173,24 @@ def build_spec(
     )
 
 
+def respec_scheme(spec: SimSpec, scheme: int) -> SimSpec:
+    """Clone a built spec for a different scheme WITHOUT rebuilding the
+    (host-expensive) EV path tables.
+
+    Mirrors ``build_spec``'s per-scheme rules via ``engine.lane_arrays``
+    (DESIGN.md §5): SPRAY_U/OPS_U get uniform weights over live paths,
+    MINIMAL pins foreground flows to the minimal route, everything else
+    inherits the base spec's weights/static draw.  The base spec must be
+    built with a weighted scheme (e.g. SPRAY_W).
+    """
+    from repro.net.sim import engine as E
+    if scheme == spec.scheme:
+        return spec
+    w, sp = E.lane_arrays(spec, scheme)
+    return dataclasses.replace(spec, scheme=scheme, weights=w,
+                               static_path=sp, name=f"{spec.name}:s{scheme}")
+
+
 def mib_to_pkts(mib: float) -> int:
     return int(np.ceil(mib * (1 << 20) / 4096))
 

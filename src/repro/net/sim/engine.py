@@ -1,5 +1,6 @@
-"""Packet-level network simulator, fully vectorized as a ``lax.scan`` over
-ticks (1 tick = 83.2 ns = serialization of one 4160 B packet @ 400 Gb/s).
+"""Packet-level network simulator with event-horizon time compression.
+
+1 tick = 83.2 ns = serialization of one 4160 B packet @ 400 Gb/s.
 
 TPU-native re-think of htsim's event queues (DESIGN.md §3): the in-flight
 packet table is a fixed-shape structure-of-arrays; per-port FIFO order is
@@ -9,12 +10,28 @@ preserved *analytically* with a service-slot counter per port:
     tail[port] += #accepted            occupancy(port) = max(tail - t, 0)
 
 so there are no queue data structures at all — enqueue, RED/ECN marking,
-trimming, service, propagation, CC and the Spritz control loop are all dense
+trimming, service, propagation, CC and the Spritz control loop are dense
 array ops over the packet table.
+
+Time advances by *event horizon* rather than tick-by-tick (DESIGN.md §4):
+every state change is anchored to an event tick (pending packet events,
+RTO deadlines, flow starts, injection eligibility, deferred CC round
+closure), so the driver jumps ``t`` straight to the next such tick.
+Per-tick PRNG keys are derived positionally (``fold_in(base, t)``), which
+makes the jump bit-exact against the dense reference stepper: executing
+the skipped ticks would have been the identity.
+
+The run loop is a device-side ``lax.while_loop`` with a donated carry (no
+per-chunk host round-trip), and ``run_batch`` vmaps the whole driver over
+(scheme, seed) lanes so a sweep compiles once (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import dataclasses
+import hashlib
+import warnings
+from functools import partial
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,9 +45,17 @@ from repro.net.sim.types import (ECMP, FB_ACK_ECN, FB_ACK_OK, FB_NACK,
                                  SPRITZ_SCHEMES, UGAL_L, VALIANT, SimResult,
                                  SimSpec)
 
+INF_TICK = jnp.int32(1 << 30)
+
+# one-hot intermediates ([M, n_ports] rank histogram, [N, n_flows] flow-sum
+# GEMM operand) are used while they stay under this many cells; beyond it
+# (paper-scale fabrics) the rank falls back to an argsort over the
+# M-compacted enqueue set and the per-flow sums to segment scatter-adds.
+_ONEHOT_CELLS = 1 << 22
+
 
 class Carry(NamedTuple):
-    rng: jax.Array
+    rng: jax.Array             # base PRNG key (constant; per-tick via fold_in)
     q_tail: jax.Array          # [n_ports] i32
     # packet table
     pstate: jax.Array          # [N] i32
@@ -68,19 +93,12 @@ class Carry(NamedTuple):
     retx: jax.Array
 
 
-def _seg_min_index(mask: jax.Array, pflow: jax.Array, F: int) -> jax.Array:
-    """Per-flow min packet index among masked packets (N if none)."""
-    N = mask.shape[0]
-    idx = jnp.where(mask, jnp.arange(N, dtype=jnp.int32), N)
-    tgt = jnp.where(mask, pflow, F)
-    out = jnp.full(F + 1, N, jnp.int32).at[tgt].min(idx)
-    return out[:F]
+class Lane(NamedTuple):
+    """Per-lane dynamic parameters for the batched driver (DESIGN.md §5)."""
 
-
-def _seg_sum(val: jax.Array, pflow: jax.Array, mask: jax.Array, F: int) -> jax.Array:
-    tgt = jnp.where(mask, pflow, F)
-    out = jnp.zeros(F + 1, val.dtype).at[tgt].add(jnp.where(mask, val, 0))
-    return out[:F]
+    scheme: jax.Array          # [] i32
+    weights: jax.Array         # [F, P] f32 sampling weights for this scheme
+    static_path: jax.Array     # [F] i32
 
 
 def _weighted_sample_rows(rng, w):
@@ -89,8 +107,27 @@ def _weighted_sample_rows(rng, w):
     return jnp.minimum(jnp.sum((csum < u).astype(jnp.int32), -1), w.shape[-1] - 1)
 
 
-def build_step(spec: SimSpec):
-    """Returns the jit-able per-tick transition function."""
+def _tick_keys(rng: jax.Array, t: jax.Array):
+    """Positional per-tick keys: skipping a tick leaves the stream intact."""
+    return jax.random.split(jax.random.fold_in(rng, t), 2)
+
+
+def _tree_select(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _padded(a: jax.Array, fill) -> jax.Array:
+    return jnp.concatenate([a, jnp.full((1,), fill, a.dtype)])
+
+
+def build_tick(spec: SimSpec, *, batched: bool = False):
+    """Returns the jit-able transition ``tick(carry, t, lane) -> carry``.
+
+    With ``batched=False`` the scheme is specialized at trace time from
+    ``spec.scheme`` and ``lane`` may be ``None``; with ``batched=True`` the
+    scheme id, sampling weights and static path come from ``lane`` so one
+    compiled program serves every (scheme, seed) lane of ``run_batch``.
+    """
     F = spec.n_flows
     N = spec.n_pkt
     NP_ = spec.n_ports
@@ -99,9 +136,9 @@ def build_step(spec: SimSpec):
     path_ports = jnp.asarray(spec.path_ports, jnp.int32)      # [F,P,H]
     path_len = jnp.asarray(spec.path_len, jnp.int32)          # [F,P]
     path_lat = jnp.asarray(spec.path_lat_ns, jnp.float32)     # [F,P]
-    weights = jnp.asarray(spec.weights, jnp.float32)
+    spec_weights = jnp.asarray(spec.weights, jnp.float32)
     valiant_w = jnp.asarray(spec.valiant_w, jnp.float32)
-    static_path = jnp.asarray(spec.static_path, jnp.int32)
+    spec_static = jnp.asarray(spec.static_path, jnp.int32)
     min_path = jnp.asarray(spec.min_path, jnp.int32)
     ret_ticks = jnp.asarray(spec.ret_ticks, jnp.int32)        # [F,P]
     rem_ticks = jnp.asarray(spec.rem_ticks, jnp.int32)        # [F,P,H]
@@ -115,55 +152,77 @@ def build_step(spec: SimSpec):
     has_dep = bool((spec.dep >= 0).any())
     has_bg = bool(spec.bg_mask.any())
 
-    scheme = spec.scheme
-    is_spritz = scheme in SPRITZ_SCHEMES
-    sz_cfg = SZ.SpritzConfig(
+    n_eps = int(spec.src_ep.max()) + 1 if len(spec.src_ep) else 1
+    # Per-tick enqueue bound: each port services <= 1 pkt/tick and per-port
+    # propagation latency is constant, so forwarded arrivals are <= n_ports;
+    # endpoint arbitration admits <= 1 injection per source endpoint.
+    M = int(min(N, NP_ + n_eps + 8))
+    use_onehot_rank = M * NP_ <= _ONEHOT_CELLS
+    use_gemm_sums = N * F <= _ONEHOT_CELLS
+
+    scheme_s = spec.scheme
+    base_cfg = dict(
         explore_threshold=spec.explore_threshold,
         ecn_threshold=spec.ecn_threshold,
         min_bias_factor=spec.min_bias_factor,
         block_ticks=spec.block_ticks,
-        variant=SZ.SCOUT if scheme == SCOUT else SZ.SPRAY,
         always_sample=False,
     )
-    n_eps = int(spec.src_ep.max()) + 1 if len(spec.src_ep) else 1
+    scout_cfg = SZ.SpritzConfig(variant=SZ.SCOUT, **base_cfg)
+    spray_cfg = SZ.SpritzConfig(variant=SZ.SPRAY, **base_cfg)
 
     def gather_fp(arr2d, path_idx):
         return jnp.take_along_axis(arr2d, path_idx[:, None], axis=1)[:, 0]
 
-    def choose_paths(c: Carry, t, rng_c, occ):
-        """Per-flow path decision for this tick's injections."""
-        if scheme in (MINIMAL, ECMP):
-            return c, static_path
-        if scheme == VALIANT:
-            return c, _weighted_sample_rows(rng_c, valiant_w)
-        if scheme in (OPS_U, OPS_W):
-            return c, _weighted_sample_rows(rng_c, weights)
-        if scheme == UGAL_L:
-            cand = _weighted_sample_rows(rng_c, valiant_w)
-            first_min = path_ports[jnp.arange(F), min_path, 0]
-            first_val = path_ports[jnp.arange(F), cand, 0]
-            q_min = occ[first_min].astype(jnp.float32)
-            q_val = occ[first_val].astype(jnp.float32)
-            h_min = gather_fp(path_len, min_path).astype(jnp.float32)
-            h_val = gather_fp(path_len, cand).astype(jnp.float32)
-            pick_min = q_min * h_min <= q_val * h_val
-            return c, jnp.where(pick_min, min_path, cand)
-        if scheme == FLICR_W:
-            move = c.flicr_marks >= spec.flicr_ecn_move
-            fresh = _weighted_sample_rows(rng_c, weights)
-            path = jnp.where(move, fresh, c.flicr_cur)
-            c = c._replace(
-                flicr_cur=path,
-                flicr_marks=jnp.where(move, 0, c.flicr_marks),
-            )
-            return c, path
-        # Spritz Scout/Spray
-        return c, None  # handled with send_logic (needs `active` mask)
+    def _ugal_pick(cand, occ):
+        first_min = path_ports[jnp.arange(F), min_path, 0]
+        first_val = path_ports[jnp.arange(F), cand, 0]
+        q_min = occ[first_min].astype(jnp.float32)
+        q_val = occ[first_val].astype(jnp.float32)
+        h_min = gather_fp(path_len, min_path).astype(jnp.float32)
+        h_val = gather_fp(path_len, cand).astype(jnp.float32)
+        pick_min = q_min * h_min <= q_val * h_val
+        return jnp.where(pick_min, min_path, cand)
 
-    def step(c: Carry, t):
-        rng, k_inj, k_path, k_mark = jax.random.split(c.rng, 4)
+    def _enqueue_rank(cport):
+        """FIFO rank among same-tick enqueues per port, in compacted space.
+
+        Small fabrics: segmented scatter-add rank — a prefix histogram of
+        one-hot port indicators (cumsum of scatter contributions) read back
+        at each packet's own port.  Large fabrics: stable argsort over the
+        M-compacted set (still ~N/M cheaper than the old table-wide sort).
+        Both produce the identical rank: position among this tick's
+        enqueues of the same port, ordered by packet-table index.
+        """
+        if use_onehot_rank:
+            oh = cport[:, None] == jnp.arange(NP_, dtype=jnp.int32)[None, :]
+            pos = jnp.cumsum(oh.astype(jnp.int32), axis=0) * oh
+            return jnp.maximum(pos.sum(-1) - 1, 0)
+        order = jnp.argsort(cport)
+        sorted_port = cport[order]
+        pos = jnp.arange(M, dtype=jnp.int32)
+        is_start = jnp.concatenate([jnp.ones(1, bool),
+                                    sorted_port[1:] != sorted_port[:-1]])
+        seg_start = jax.lax.associative_scan(jnp.maximum,
+                                             jnp.where(is_start, pos, 0))
+        rank_sorted = pos - seg_start
+        return jnp.zeros(M, jnp.int32).at[order].set(rank_sorted)
+
+    def tick(c: Carry, t, lane: Lane | None = None):
+        k_path, k_mark = _tick_keys(c.rng, t)
         t = t.astype(jnp.int32)
         occ = jnp.maximum(c.q_tail - t, 0)
+        if batched:
+            scheme = lane.scheme
+            weights = lane.weights
+            static_path = lane.static_path
+            is_spritz = ((scheme == SCOUT) | (scheme == SPRAY_U)
+                         | (scheme == SPRAY_W))
+        else:
+            scheme = scheme_s
+            weights = spec_weights
+            static_path = spec_static
+            is_spritz = scheme_s in SPRITZ_SCHEMES
 
         # ---------------- A. feedback arrivals + timeouts -------------------
         ack_m = (c.pstate == P_ACKWAIT) & (c.pevent == t)
@@ -171,35 +230,56 @@ def build_step(spec: SimSpec):
         inflight_states = (c.pstate == P_QUEUED) | (c.pstate == P_PROP) | (c.pstate == P_LOST)
         to_m = inflight_states & (t - c.psent > spec.rto_ticks)
 
-        one = jnp.ones(N, jnp.int32)
-        n_ack = _seg_sum(one, c.pflow, ack_m, F)
-        n_mark = _seg_sum(one, c.pflow, ack_m & c.pecn, F)
-        n_nack = _seg_sum(one, c.pflow, nack_m, F)
-        n_to = _seg_sum(one, c.pflow, to_m, F)
-        # network-wide congestion estimate from exploration packets only
-        n_exp = _seg_sum(one, c.pflow, (ack_m | nack_m) & c.pexp, F)
-        n_exp_bad = _seg_sum(one, c.pflow,
-                             ((ack_m & c.pecn) | nack_m) & c.pexp, F)
+        # Per-flow sums as ONE one-hot GEMM instead of per-mask scatters
+        # (XLA CPU scatter walks updates serially; the [K,N]x[N,F] product
+        # vectorizes).  Counts are < 2^24, so f32 accumulation is exact.
+        # Beyond the one-hot cell budget (paper-scale F x N) fall back to
+        # segment scatter-adds — exact either way.
+        if use_gemm_sums:
+            flow_oh = (c.pflow[:, None]
+                       == jnp.arange(F, dtype=jnp.int32)[None, :]
+                       ).astype(jnp.float32)                 # [N, F]
+
+            def flow_sums(rows):                             # [K, N] -> [K, F]
+                return (rows.astype(jnp.float32)
+                        @ flow_oh).astype(jnp.int32)
+        else:
+            def flow_sums(rows):
+                return jnp.stack([
+                    jnp.zeros(F, jnp.int32).at[c.pflow].add(
+                        r.astype(jnp.int32)) for r in rows])
+        ecn_ack = ack_m & c.pecn
+        sums = flow_sums(jnp.stack([
+            ack_m, ecn_ack, nack_m, to_m,
+            (ack_m | nack_m) & c.pexp,
+            (ecn_ack | nack_m) & c.pexp,
+        ]))                                                  # [6, F]
+        n_ack, n_mark, n_nack, n_to, n_exp, n_exp_bad = sums
         g2 = spec.dctcp_g
         exp_alpha = jnp.where(
             n_exp > 0,
             (1 - g2) * c.exp_alpha + g2 * n_exp_bad / jnp.maximum(n_exp, 1),
             c.exp_alpha)
 
-        # representative feedback event per flow (priority TO > NACK > ECN > OK)
-        rep_to = _seg_min_index(to_m, c.pflow, F)
-        rep_nack = _seg_min_index(nack_m, c.pflow, F)
-        rep_ecn = _seg_min_index(ack_m & c.pecn, c.pflow, F)
-        rep_ok = _seg_min_index(ack_m & ~c.pecn, c.pflow, F)
-        ppath_x = jnp.concatenate([c.ppath, jnp.zeros(1, jnp.int32)])  # idx N pad
-
-        fb_type = jnp.full(F, FB_NONE, jnp.int32)
-        fb_ev = jnp.zeros(F, jnp.int32)
-        for rep, code in ((rep_ok, FB_ACK_OK), (rep_ecn, FB_ACK_ECN),
-                          (rep_nack, FB_NACK), (rep_to, FB_TIMEOUT)):
-            has = rep < N
-            fb_type = jnp.where(has, code, fb_type)
-            fb_ev = jnp.where(has, ppath_x[jnp.minimum(rep, N)], fb_ev)
+        # representative feedback event per flow (priority TO > NACK > ECN >
+        # OK; min packet index within the winning class) via ONE composite
+        # scatter-min: key = (3 - class) * N + index, and the class codes
+        # are ordered so that class == FB code.
+        fb_m = ack_m | nack_m | to_m
+        fb_cat = jnp.where(to_m, FB_TIMEOUT,
+                           jnp.where(nack_m, FB_NACK,
+                                     jnp.where(ecn_ack, FB_ACK_ECN,
+                                               FB_ACK_OK)))
+        ckey = (FB_TIMEOUT - fb_cat) * N + jnp.arange(N, dtype=jnp.int32)
+        BIGK = jnp.int32((FB_TIMEOUT + 1) * N)
+        kmin = jnp.full(F + 1, BIGK, jnp.int32).at[
+            jnp.where(fb_m, c.pflow, F)].min(
+            jnp.where(fb_m, ckey, BIGK))[:F]
+        has_fb = kmin < BIGK
+        rep_idx = jnp.where(has_fb, kmin % N, N)
+        ppath_x = _padded(c.ppath, 0)  # idx N pad
+        fb_type = jnp.where(has_fb, FB_TIMEOUT - kmin // N, FB_NONE)
+        fb_ev = jnp.where(has_fb, ppath_x[jnp.minimum(rep_idx, N)], 0)
 
         # --- CC (DCTCP + SMaRTT-style QuickAdapt/FastIncrease) ---
         # ECN marks drive the DCTCP alpha cut; QuickAdapt fires only on
@@ -237,8 +317,16 @@ def build_step(spec: SimSpec):
 
         # --- Spritz feedback ---
         spritz = c.spritz
-        if is_spritz:
-            spritz = SZ.feedback_logic(spritz, sz_cfg, fb_ev, fb_type,
+        if batched:
+            sc = SZ.feedback_logic(spritz, scout_cfg, fb_ev, fb_type,
+                                   exp_alpha, path_lat, t)
+            sp = SZ.feedback_logic(spritz, spray_cfg, fb_ev, fb_type,
+                                   exp_alpha, path_lat, t)
+            spritz = _tree_select(
+                is_spritz, _tree_select(scheme == SCOUT, sc, sp), spritz)
+        elif is_spritz:
+            cfg = scout_cfg if scheme_s == SCOUT else spray_cfg
+            spritz = SZ.feedback_logic(spritz, cfg, fb_ev, fb_type,
                                        exp_alpha, path_lat, t)
         flicr_marks = c.flicr_marks + n_mark + 8 * (n_nack + n_to)
 
@@ -259,14 +347,16 @@ def build_step(spec: SimSpec):
         deliver = svc & at_delivery
         forward = svc & ~at_delivery
 
-        # OOO accounting at delivery (<=1 delivery per flow per tick)
-        dflow = jnp.where(deliver, c.pflow, F)
-        dpsn = _seg_sum(c.ppsn, c.pflow, deliver, F)  # sum == value (one pkt)
-        has_del = _seg_sum(one, c.pflow, deliver, F) > 0
+        # OOO accounting at delivery (<=1 delivery per flow per tick);
+        # sum == value since one packet delivers, via the same flow sums
+        dsums = flow_sums(jnp.stack([
+            jnp.where(deliver, c.ppsn, 0),
+            deliver.astype(jnp.int32),
+        ]))
+        dpsn, has_del = dsums[0], dsums[1] > 0
         is_ooo = has_del & (dpsn != c.exp_psn)
         ooo = c.ooo + is_ooo.astype(jnp.int32)
         exp_psn = jnp.where(has_del, jnp.maximum(c.exp_psn, dpsn + 1), c.exp_psn)
-        del dflow
 
         ret = ret_ticks[c.pflow, c.ppath]
         pevent = jnp.where(deliver, t + ret, c.pevent)
@@ -283,7 +373,7 @@ def build_step(spec: SimSpec):
         eligible = (t >= start_tick) & (acked < size_pkts) & work_left & \
                    (inflight < jnp.floor(cwnd).astype(jnp.int32)) & (c.fct < 0)
         if has_dep:
-            fct_x = jnp.concatenate([fct, jnp.zeros(1, jnp.int32)])
+            fct_x = _padded(fct, 0)
             dep_done = (dep < 0) | (fct_x[jnp.maximum(dep, -1)] >= 0)
             # dep == -1 gathers fct_x[-1] == trash; masked by dep < 0 above
             eligible = eligible & dep_done
@@ -295,32 +385,71 @@ def build_step(spec: SimSpec):
         ep_best = jnp.zeros(n_eps, jnp.int32).at[src_ep].max(key)
         win = eligible & (key == ep_best[src_ep])
 
-        # free-slot allocation
+        # free-slot allocation: k-th winner takes the k-th free slot, found
+        # by searchsorted over the free-count prefix (no N-sized scatter)
         free_m = pstate == P_FREE
         n_free = jnp.cumsum(free_m.astype(jnp.int32))
-        free_rank = n_free - 1  # rank among free slots
-        slot_by_rank = jnp.full(N + 1, N, jnp.int32).at[
-            jnp.where(free_m, free_rank, N)].min(jnp.arange(N, dtype=jnp.int32))
         win_rank = jnp.cumsum(win.astype(jnp.int32)) - 1
         have_slot = win & (win_rank < n_free[-1])
-        flow_slot = slot_by_rank[jnp.minimum(win_rank, N)]  # [F]
+        flow_slot = jnp.searchsorted(
+            n_free, jnp.maximum(win_rank, 0) + 1, side="left"
+        ).astype(jnp.int32)  # [F]; == N when out of slots (masked by tgt)
 
-        # path choice
-        c2 = c
+        # path choice.  All candidate selectors consume k_path through the
+        # identical uniform draw, so the batched select and the specialized
+        # branch produce bit-identical choices per scheme.
         explored = jnp.ones(F, bool)
-        if is_spritz:
-            spritz, path_sel, explored = SZ.send_logic(spritz, sz_cfg, k_path,
-                                                       t, have_slot)
+        flicr_cur = c.flicr_cur
+        if batched:
+            p_val = _weighted_sample_rows(k_path, valiant_w)
+            p_w = _weighted_sample_rows(k_path, weights)
+            p_ugal = _ugal_pick(p_val, occ)
+            move = flicr_marks >= spec.flicr_ecn_move
+            p_flicr = jnp.where(move, p_w, c.flicr_cur)
+            is_flicr = scheme == FLICR_W
+            flicr_cur = jnp.where(is_flicr, p_flicr, c.flicr_cur)
+            flicr_marks = jnp.where(is_flicr & move, 0, flicr_marks)
+            sp2, p_sz, explored_sz = SZ.send_logic(
+                spritz, scout_cfg._replace(
+                    variant=jnp.where(scheme == SCOUT, SZ.SCOUT, SZ.SPRAY)),
+                k_path, t, have_slot)
+            spritz = _tree_select(is_spritz, sp2, spritz)
+            is_static = (scheme == MINIMAL) | (scheme == ECMP)
+            path_sel = jnp.where(
+                is_static, static_path,
+                jnp.where(scheme == VALIANT, p_val,
+                          jnp.where((scheme == OPS_U) | (scheme == OPS_W), p_w,
+                                    jnp.where(scheme == UGAL_L, p_ugal,
+                                              jnp.where(is_flicr, p_flicr,
+                                                        p_sz)))))
+            explored = jnp.where(is_spritz, explored_sz, explored)
+        elif is_spritz:
+            spritz, path_sel, explored = SZ.send_logic(
+                spritz,
+                (scout_cfg if scheme_s == SCOUT else spray_cfg),
+                k_path, t, have_slot)
+        elif scheme_s in (MINIMAL, ECMP):
+            path_sel = static_path
+        elif scheme_s == VALIANT:
+            path_sel = _weighted_sample_rows(k_path, valiant_w)
+        elif scheme_s in (OPS_U, OPS_W):
+            path_sel = _weighted_sample_rows(k_path, weights)
+        elif scheme_s == UGAL_L:
+            path_sel = _ugal_pick(_weighted_sample_rows(k_path, valiant_w), occ)
+        elif scheme_s == FLICR_W:
+            move = flicr_marks >= spec.flicr_ecn_move
+            fresh = _weighted_sample_rows(k_path, weights)
+            path_sel = jnp.where(move, fresh, c.flicr_cur)
+            flicr_cur = path_sel
+            flicr_marks = jnp.where(move, 0, flicr_marks)
         else:
-            c2, path_sel = choose_paths(c._replace(flicr_marks=flicr_marks), t,
-                                        k_path, occ)
-            flicr_marks = c2.flicr_marks
-        flicr_cur = c2.flicr_cur if scheme == FLICR_W else c.flicr_cur
+            raise ValueError(f"unknown scheme {scheme_s}")
         if has_bg:  # background jobs stay on static ECMP paths (paper §V-B)
             path_sel = jnp.where(bg_mask, static_path, path_sel)
 
         # write new packets (scatter via trash row N)
         tgt = jnp.where(have_slot, flow_slot, N)
+
         def scatter_new(arr, val):
             big = jnp.concatenate([arr, jnp.zeros((1,), arr.dtype)])
             big = big.at[tgt].set(val.astype(arr.dtype))
@@ -346,54 +475,68 @@ def build_step(spec: SimSpec):
         retx_stat = c.retx + is_retx.astype(jnp.int32)
 
         # ---------------- E. enqueue (arrivals + injections) ----------------
-        enq = arrive | injected_pkt
-        eport = path_ports[pflow, ppath, phop]
-        eport = jnp.where(enq, eport, NP_)
-        failed = enq & port_failed[jnp.minimum(eport, NP_ - 1)] & (eport < NP_)
-        enq = enq & ~failed
+        enq0 = arrive | injected_pkt
+        eport_n = jnp.where(enq0, path_ports[pflow, ppath, phop], NP_)
+        failed = enq0 & (eport_n < NP_) & \
+            port_failed[jnp.minimum(eport_n, NP_ - 1)]
+        enq = enq0 & ~failed
         pstate = jnp.where(failed, P_LOST, pstate)
 
-        # FIFO rank among same-tick arrivals per port
-        sort_key = jnp.where(enq, eport, NP_ + 1)
-        order = jnp.argsort(sort_key)
-        sorted_port = sort_key[order]
-        pos = jnp.arange(N, dtype=jnp.int32)
-        is_start = jnp.concatenate([jnp.ones(1, bool),
-                                    sorted_port[1:] != sorted_port[:-1]])
-        seg_start = jax.lax.associative_scan(jnp.maximum,
-                                             jnp.where(is_start, pos, 0))
-        rank_sorted = pos - seg_start
-        rank = jnp.zeros(N, jnp.int32).at[order].set(rank_sorted)
+        # compact the <= M enqueues of this tick (M = n_ports + n_eps + 8:
+        # each port services <= 1 pkt/tick with a constant per-port latency,
+        # so forwarded arrivals are <= n_ports; endpoint arbitration admits
+        # <= 1 injection per endpoint) — all FIFO/RED/trim math runs in
+        # [M] instead of [N].
+        n_enq = jnp.cumsum(enq.astype(jnp.int32))
+        cidx = jnp.searchsorted(
+            n_enq, jnp.arange(M, dtype=jnp.int32) + 1, side="left"
+        ).astype(jnp.int32)  # [M]; == N past the last enqueue
+        valid = cidx < N
+        cidx_s = jnp.minimum(cidx, N)
+        cflow = _padded(pflow, F)[cidx_s]
+        cpath = _padded(ppath, 0)[cidx_s]
+        chop = _padded(phop, 0)[cidx_s]
+        cport = _padded(eport_n, NP_)[cidx_s]
 
-        tail_e = c.q_tail[jnp.minimum(eport, NP_ - 1)]
+        # FIFO rank among same-tick arrivals per port (compacted)
+        rank = _enqueue_rank(cport)
+
+        tail_e = c.q_tail[jnp.minimum(cport, NP_ - 1)]
         occ_at = jnp.maximum(tail_e - t, 0) + rank
-        trim = enq & (occ_at >= spec.qsize)
-        accept = enq & ~trim
+        trim = valid & (occ_at >= spec.qsize)
+        accept = valid & ~(occ_at >= spec.qsize)
 
         # RED / ECN marking probability between kmin..kmax
         pr = jnp.clip((occ_at.astype(jnp.float32) - spec.kmin)
                       / max(spec.kmax - spec.kmin, 1e-9), 0.0, 1.0)
-        mark = accept & (jax.random.uniform(k_mark, (N,)) < pr)
-        pecn = pecn | mark
+        mark = accept & (jax.random.uniform(k_mark, (M,)) < pr)
+        pecn = pecn | jnp.zeros(N + 1, bool).at[
+            jnp.where(mark, cidx_s, N)].set(True)[:N]
 
         slot = jnp.maximum(tail_e, t) + rank + 1
-        pevent = jnp.where(accept, slot, pevent)
-        pstate = jnp.where(accept, P_QUEUED, pstate)
-
         # trimmed: header continues + NACK returns (priority, prop-only)
-        nack_at = t + rem_ticks[pflow, ppath, jnp.minimum(phop, rem_ticks.shape[2] - 1)]
-        pevent = jnp.where(trim, nack_at, pevent)
-        pstate = jnp.where(trim, P_NACKWAIT, pstate)
-        trims = c.trims + _seg_sum(one, pflow, trim, F)
+        nack_at = t + rem_ticks[jnp.minimum(cflow, F - 1), cpath,
+                                jnp.minimum(chop, rem_ticks.shape[2] - 1)]
+        new_state = jnp.where(trim, P_NACKWAIT, P_QUEUED)
+        new_event = jnp.where(trim, nack_at, slot)
+        ctgt = jnp.where(valid, cidx_s, N)
+        pstate = _padded(pstate, 0).at[ctgt].set(
+            jnp.where(valid, new_state, 0))[:N]
+        pevent = _padded(pevent, 0).at[ctgt].set(
+            jnp.where(valid, new_event, 0))[:N]
+
+        trims = c.trims + jnp.zeros(F + 1, jnp.int32).at[
+            jnp.where(trim, cflow, F)].add(1)[:F]
         timeouts = c.timeouts + n_to
         delivered = c.delivered + n_ack
 
-        n_acc = jnp.zeros(NP_ + 2, jnp.int32).at[jnp.minimum(eport, NP_ + 1)].add(
-            accept.astype(jnp.int32))[:NP_]
-        q_tail = jnp.where(n_acc > 0, jnp.maximum(c.q_tail, t) + n_acc, c.q_tail)
+        n_acc = jnp.zeros(NP_ + 1, jnp.int32).at[
+            jnp.where(accept, cport, NP_)].add(1)[:NP_]
+        q_tail = jnp.where(n_acc > 0, jnp.maximum(c.q_tail, t) + n_acc,
+                           c.q_tail)
 
         return Carry(
-            rng=rng, q_tail=q_tail,
+            rng=c.rng, q_tail=q_tail,
             pstate=pstate, pflow=pflow, ppath=ppath, phop=phop, pevent=pevent,
             pecn=pecn, pexp=pexp, psent=psent, ppsn=ppsn,
             next_seq=next_seq, acked=acked, retx_pend=retx_pend,
@@ -404,14 +547,69 @@ def build_step(spec: SimSpec):
             spritz=spritz,
             fct=fct, delivered=delivered, trims=trims, timeouts=timeouts,
             ooo=ooo, retx=retx_stat,
-        ), None
+        )
 
-    return step
+    return tick
 
 
-def init_carry(spec: SimSpec, seed: int = 0) -> Carry:
+def build_horizon(spec: SimSpec):
+    """Returns ``horizon(carry, t) -> next event tick > t`` (DESIGN.md §4).
+
+    The horizon is the min over every tick at which the dense stepper could
+    change state: scheduled packet events, RTO deadlines, injection
+    eligibility (gated on a free table slot), pending flow starts, and
+    deferred CC round closure.  Every tick strictly inside (t, horizon) is
+    a provable no-op of the transition, so jumping is bit-exact.
+    """
+    size_pkts = jnp.asarray(spec.size_pkts, jnp.int32)
+    start_tick = jnp.asarray(spec.start_tick, jnp.int32)
+    dep = jnp.asarray(spec.dep, jnp.int32)
+    has_dep = bool((spec.dep >= 0).any())
+    rto1 = jnp.int32(spec.rto_ticks + 1)
+
+    def horizon(c: Carry, t):
+        live = ((c.pstate == P_QUEUED) | (c.pstate == P_PROP)
+                | (c.pstate == P_ACKWAIT) | (c.pstate == P_NACKWAIT))
+        ev_pkt = jnp.min(jnp.where(live, c.pevent, INF_TICK))
+        to_states = ((c.pstate == P_QUEUED) | (c.pstate == P_PROP)
+                     | (c.pstate == P_LOST))
+        ev_rto = jnp.min(jnp.where(to_states, c.psent + rto1, INF_TICK))
+        # injection: an eligible flow with a free table slot injects at
+        # every tick, so the next injection tick is max(start, t+1)
+        work_left = (c.next_seq < size_pkts) | (c.retx_pend > 0)
+        elig = (c.acked < size_pkts) & work_left & (c.fct < 0) & \
+               (c.inflight < jnp.floor(c.cwnd).astype(jnp.int32))
+        if has_dep:
+            fct_x = _padded(c.fct, 0)
+            dep_done = (dep < 0) | (fct_x[jnp.maximum(dep, -1)] >= 0)
+            elig = elig & dep_done
+        any_free = jnp.any(c.pstate == P_FREE)
+        ev_inj = jnp.where(
+            any_free,
+            jnp.min(jnp.where(elig, jnp.maximum(start_tick, t + 1),
+                              INF_TICK)),
+            INF_TICK)
+        # deferred CC round closure: a cwnd collapse can pull round_thr at
+        # or below already-banked round_acks, making the *next* tick fire
+        # the round with no new feedback
+        round_thr = jnp.maximum(1, jnp.minimum(c.round_size,
+                                               c.cwnd.astype(jnp.int32)))
+        pend_round = jnp.any((c.round_acks >= round_thr) & (c.fct < 0))
+        ev_cc = jnp.where(pend_round, t + 1, INF_TICK)
+        h = jnp.minimum(jnp.minimum(ev_pkt, ev_rto),
+                        jnp.minimum(ev_inj, ev_cc))
+        return jnp.maximum(t + 1, h)
+
+    return horizon
+
+
+def init_carry(spec: SimSpec, seed: int = 0,
+               weights: np.ndarray | None = None,
+               static_path: np.ndarray | None = None) -> Carry:
     F, N = spec.n_flows, spec.n_pkt
-    return Carry(
+    w = spec.weights if weights is None else weights
+    sp = spec.static_path if static_path is None else static_path
+    carry = Carry(
         rng=jax.random.PRNGKey(seed),
         q_tail=jnp.zeros(spec.n_ports, jnp.int32),
         pstate=jnp.zeros(N, jnp.int32), pflow=jnp.zeros(N, jnp.int32),
@@ -428,36 +626,95 @@ def init_carry(spec: SimSpec, seed: int = 0) -> Carry:
         round_acks=jnp.zeros(F, jnp.int32), round_marks=jnp.zeros(F, jnp.int32),
         round_nacks=jnp.zeros(F, jnp.int32),
         round_size=jnp.full(F, max(int(spec.cwnd_init), 1), jnp.int32),
-        flicr_cur=jnp.asarray(spec.static_path, jnp.int32),
+        flicr_cur=jnp.asarray(sp, jnp.int32),
         flicr_marks=jnp.zeros(F, jnp.int32),
-        spritz=SZ.init_state(jnp.asarray(spec.weights, jnp.float32)),
+        spritz=SZ.init_state(jnp.asarray(w, jnp.float32)),
         fct=jnp.full(F, -1, jnp.int32), delivered=jnp.zeros(F, jnp.int32),
         trims=jnp.zeros(F, jnp.int32), timeouts=jnp.zeros(F, jnp.int32),
         ooo=jnp.zeros(F, jnp.int32), retx=jnp.zeros(F, jnp.int32),
     )
+    # the runner donates the carry; aliased leaves (e.g. SpritzState.w and
+    # w_orig come from the same no-op astype) would be donated twice
+    return jax.tree.map(jnp.copy, carry)
 
 
-def run(spec: SimSpec, seed: int = 0, chunk: int = 2048,
-        stop_flows: np.ndarray | None = None) -> SimResult:
-    """Run the simulation for spec.n_ticks (chunked scans so we can stop
-    early once every flow — or every flow in `stop_flows` — completed)."""
-    step = build_step(spec)
+def _make_loop(spec: SimSpec, *, dense: bool, batched: bool):
+    """Device-side driver: while_loop until budget exhausted or all watched
+    flows complete.  ``dense=True`` steps every tick (reference stepper);
+    otherwise the next tick is the event horizon."""
+    tick = build_tick(spec, batched=batched)
+    hor = None if dense else build_horizon(spec)
+    n_ticks = jnp.int32(spec.n_ticks)
 
-    @jax.jit
-    def run_chunk(carry, t0):
-        ticks = t0 + jnp.arange(chunk, dtype=jnp.int32)
-        carry, _ = jax.lax.scan(step, carry, ticks)
-        return carry
+    def loop(carry: Carry, watch, lane: Lane | None = None):
+        def cond(s):
+            c, t, steps = s
+            done = jnp.all(jnp.where(watch, c.fct >= 0, True))
+            return (t < n_ticks) & ~done
 
-    watch = (np.arange(spec.n_flows) if stop_flows is None
-             else np.asarray(stop_flows))
-    carry = init_carry(spec, seed)
-    t0 = 0
-    while t0 < spec.n_ticks:
-        carry = run_chunk(carry, jnp.int32(t0))
-        t0 += chunk
-        if bool(jnp.all(carry.fct[watch] >= 0)):
-            break
+        def body(s):
+            c, t, steps = s
+            h = (t + 1) if dense else hor(c, t)
+            h = jnp.minimum(h, n_ticks)
+            ex = h < n_ticks
+            c2 = tick(c, jnp.minimum(h, n_ticks - 1), lane)
+            c = _tree_select(ex, c2, c)
+            return (c, jnp.where(ex, h, n_ticks), steps + ex.astype(jnp.int32))
+
+        return jax.lax.while_loop(
+            cond, body, (carry, jnp.int32(-1), jnp.int32(0)))
+
+    return loop
+
+
+_RUNNER_CACHE: dict = {}
+_RUNNER_CACHE_MAX = 32
+
+
+def _spec_key(spec: SimSpec) -> tuple:
+    """Content fingerprint of a spec: identical specs share one compiled
+    driver (jax.jit caches per wrapper object, so a fresh jit per run()
+    call would otherwise retrace every time)."""
+    h = hashlib.blake2b(digest_size=16)
+    scalars = []
+    for f in dataclasses.fields(spec):
+        v = getattr(spec, f.name)
+        if isinstance(v, np.ndarray):
+            h.update(f.name.encode())
+            h.update(str(v.shape).encode() + str(v.dtype).encode())
+            h.update(np.ascontiguousarray(v).tobytes())
+        elif f.name != "name":
+            scalars.append((f.name, v))
+    return (tuple(scalars), h.hexdigest())
+
+
+def _runner(spec: SimSpec, *, dense: bool, batched: bool):
+    key = (_spec_key(spec), dense, batched)
+    runner = _RUNNER_CACHE.get(key)
+    if runner is None:
+        loop = _make_loop(spec, dense=dense, batched=batched)
+        if batched:
+            runner = jax.jit(
+                jax.vmap(lambda c, w, ln: loop(c, w, ln),
+                         in_axes=(0, None, 0)),
+                donate_argnums=(0,))
+        else:
+            runner = jax.jit(lambda c, w: loop(c, w), donate_argnums=(0,))
+        if len(_RUNNER_CACHE) >= _RUNNER_CACHE_MAX:
+            _RUNNER_CACHE.pop(next(iter(_RUNNER_CACHE)))
+        _RUNNER_CACHE[key] = runner
+    return runner
+
+
+def _watch_mask(spec: SimSpec, stop_flows) -> np.ndarray:
+    if stop_flows is None:
+        return np.ones(spec.n_flows, bool)
+    m = np.zeros(spec.n_flows, bool)
+    m[np.asarray(stop_flows)] = True
+    return m
+
+
+def _result(carry: Carry, t, steps) -> SimResult:
     return SimResult(
         fct_ticks=np.asarray(carry.fct),
         delivered=np.asarray(carry.delivered),
@@ -466,4 +723,136 @@ def run(spec: SimSpec, seed: int = 0, chunk: int = 2048,
         ooo=np.asarray(carry.ooo),
         retx=np.asarray(carry.retx),
         done=np.asarray(carry.fct >= 0),
+        ticks_simulated=int(t),
+        steps_executed=int(steps),
     )
+
+
+def run(spec: SimSpec, seed: int = 0, chunk: int | None = None,
+        stop_flows: np.ndarray | None = None,
+        reference: bool = False) -> SimResult:
+    """Run the simulation for up to ``spec.n_ticks`` virtual ticks.
+
+    The driver is a single donated device-side while_loop that stops as
+    soon as every flow — or every flow in ``stop_flows`` — completed.
+    ``reference=True`` selects the dense tick-by-tick stepper (the
+    bit-exact oracle for the event-compressed default).  ``chunk`` is
+    accepted for backwards compatibility and ignored: there is no chunked
+    host loop any more.
+    """
+    del chunk
+    watch = jnp.asarray(_watch_mask(spec, stop_flows))
+    runner = _runner(spec, dense=reference, batched=False)
+    with warnings.catch_warnings():
+        # donation is a no-op on CPU; the advisory warning is noise there
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        carry, t, steps = runner(init_carry(spec, seed), watch)
+    return _result(carry, t, steps)
+
+
+run_reference = partial(run, reference=True)
+
+
+def lane_arrays(spec: SimSpec, scheme: int) -> tuple[np.ndarray, np.ndarray]:
+    """Derive a scheme lane's (weights, static_path) from a base spec,
+    mirroring ``build_spec``'s per-scheme rules (DESIGN.md §5):
+
+    * SPRAY_U / OPS_U sample uniformly over each flow's live paths;
+    * MINIMAL pins foreground flows to the minimal route;
+    * everything else reuses the base spec's Eq.-1 weights / ECMP draw.
+
+    The base spec must therefore be built with a *weighted* scheme
+    (anything except SPRAY_U/OPS_U/MINIMAL) so its weights and static
+    paths carry the generic values.
+    """
+    if scheme in (SPRAY_U, OPS_U):
+        F, P = spec.weights.shape
+        w = np.zeros((F, P), np.float32)
+        for fi in range(F):
+            w[fi, :int(spec.n_paths[fi])] = 1.0
+    else:
+        if spec.scheme in (SPRAY_U, OPS_U):
+            raise ValueError(
+                "cannot derive weighted-scheme lanes from a uniform-weight "
+                "base spec; build the base spec with e.g. SPRAY_W")
+        w = np.asarray(spec.weights, np.float32)
+    if scheme == MINIMAL:
+        sp = np.where(spec.bg_mask, spec.static_path, spec.min_path)
+    else:
+        if spec.scheme == MINIMAL:
+            raise ValueError(
+                "cannot derive ECMP-style lanes from a MINIMAL base spec; "
+                "build the base spec with e.g. SPRAY_W")
+        sp = np.asarray(spec.static_path)
+    return w, np.asarray(sp, np.int32)
+
+
+def run_batch(spec: SimSpec | Sequence[SimSpec],
+              schemes: Sequence[int] | None = None,
+              seeds: Sequence[int] = (0,),
+              stop_flows: np.ndarray | None = None,
+              reference: bool = False) -> list[SimResult]:
+    """Batched driver: one compiled program for a scheme x seed sweep.
+
+    Either pass one base ``spec`` plus ``schemes`` (lane weights/static
+    paths derived via :func:`lane_arrays`), or a sequence of per-scheme
+    specs that share every static field except scheme/weights/static_path.
+    Lanes are vmapped over the whole while_loop driver — scheme-major,
+    seed-minor order — and results come back as a flat list of
+    ``SimResult`` of length ``len(schemes) * len(seeds)``.
+    """
+    if isinstance(spec, SimSpec):
+        if schemes is None:
+            schemes = [spec.scheme]
+        base = spec
+        lane_specs = []
+        for s in schemes:
+            if s == base.scheme:
+                lane_specs.append((s, np.asarray(base.weights, np.float32),
+                                   np.asarray(base.static_path, np.int32)))
+            else:
+                w, sp = lane_arrays(base, s)
+                lane_specs.append((s, w, sp))
+    else:
+        specs = list(spec)
+        if schemes is not None:
+            raise ValueError("pass schemes only with a single base spec")
+        base = specs[0]
+        for s in specs[1:]:
+            if (s.n_pkt, s.n_ports, s.n_flows, s.n_ticks) != \
+               (base.n_pkt, base.n_ports, base.n_flows, base.n_ticks):
+                raise ValueError("lane specs must share static shapes")
+        lane_specs = [(s.scheme, np.asarray(s.weights, np.float32),
+                       np.asarray(s.static_path, np.int32)) for s in specs]
+
+    lanes = Lane(
+        scheme=jnp.asarray(np.repeat([s for s, _, _ in lane_specs],
+                                     len(seeds)), jnp.int32),
+        weights=jnp.asarray(np.repeat(
+            np.stack([w for _, w, _ in lane_specs]), len(seeds), axis=0)),
+        static_path=jnp.asarray(np.repeat(
+            np.stack([p for _, _, p in lane_specs]), len(seeds), axis=0)),
+    )
+    carries = [init_carry(base, seed, weights=w, static_path=p)
+               for (_, w, p) in lane_specs for seed in seeds]
+    carry0 = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
+    watch = jnp.asarray(_watch_mask(base, stop_flows))
+
+    runner = _runner(base, dense=reference, batched=True)
+    with warnings.catch_warnings():
+        # donation is a no-op on CPU; the advisory warning is noise there
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        carry, t, steps = runner(carry0, watch, lanes)
+    out = []
+    for i in range(len(lane_specs) * len(seeds)):
+        lane_carry = jax.tree.map(lambda x: x[i], carry)
+        out.append(_result(lane_carry, t[i], steps[i]))
+    return out
+
+
+def batch_lanes(schemes: Sequence[int], seeds: Sequence[int]
+                ) -> list[tuple[int, int]]:
+    """The (scheme, seed) order ``run_batch`` returns results in."""
+    return [(s, seed) for s in schemes for seed in seeds]

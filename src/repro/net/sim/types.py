@@ -102,3 +102,12 @@ class SimResult(NamedTuple):
     ooo: np.ndarray                  # [F] out-of-order deliveries (PSN skew)
     retx: np.ndarray                 # [F] retransmissions injected
     done: np.ndarray                 # [F] bool
+    # engine counters (DESIGN.md §4): virtual time covered vs device steps
+    # actually executed — their ratio is the event-compression factor.
+    ticks_simulated: int = -1
+    steps_executed: int = -1
+
+    @property
+    def compression(self) -> float:
+        """Virtual ticks covered per executed device step."""
+        return self.ticks_simulated / max(self.steps_executed, 1)

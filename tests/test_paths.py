@@ -1,8 +1,18 @@
 """SGAR path-layer tests: Table I reproduction + bounded-simple-path
-properties (hypothesis)."""
+properties (hypothesis).
+
+``hypothesis`` is an *optional* dev dependency (see DESIGN.md §7): the
+property-based subset of this module is skipped when it is absent so the
+tier-1 suite still collects on the seed environment.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (DESIGN.md §7): only @given tests
+    from conftest import hyp_stubs  # skip; the rest of the module runs
+    given, settings, st = hyp_stubs()
 
 from repro.net import paths as P
 from repro.net.topology.base import GLOBAL, LOCAL

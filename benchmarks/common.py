@@ -44,7 +44,7 @@ def fct_stats(res, mask=None, prefix=""):
     fct = B.ticks_to_us(res.fct_ticks[sel])
     done = res.done[sel]
     out = {
-        f"{prefix}done_frac": float(done.mean()),
+        f"{prefix}done_frac": float(done.mean()) if sel.any() else -1,
         f"{prefix}fct_mean_us": float(fct[done].mean()) if done.any() else -1,
         f"{prefix}fct_p50_us": float(np.percentile(fct[done], 50)) if done.any() else -1,
         f"{prefix}fct_p99_us": float(np.percentile(fct[done], 99)) if done.any() else -1,
@@ -55,6 +55,14 @@ def fct_stats(res, mask=None, prefix=""):
                                   / max(res.delivered[sel].sum(), 1)),
     }
     return out
+
+
+def completed_after(res, flows, tick):
+    """Mask of flows whose completion tick lies after virtual ``tick`` —
+    feed to ``fct_stats(res, mask)`` for post-failure FCT slices.  A flow
+    that never finished counts as 'after' (it was still running)."""
+    start = np.asarray([f.start_tick for f in flows])
+    return ~res.done | (start + res.fct_ticks > tick)
 
 
 def run_schemes(topo, flows, schemes, *, n_ticks, seed=0, stop_flows=None,

@@ -1,5 +1,12 @@
-"""Spritz failover demo (paper §V-D): disable 2% of links mid-run and watch
-Spritz-Spray route around them while ECMP-pinned flows stall into timeouts.
+"""Spritz failover demo (paper §V-D): kill 2% of links MID-RUN, watch
+Spritz timeout-block the dead EVs and fall back to its good-path buffer,
+then heal the links and watch it re-probe them — while ECMP-pinned flows
+can only retransmit into the void until the outage ends.
+
+The failure timeline (DESIGN.md §10) is a first-class scenario axis: the
+event-compressed driver stops at every scheduled fail/recover tick, kills
+the packets caught on a dying port (queued -> trim/NACK, on the wire ->
+lost/RTO) and flips the live ``port_up`` mask carried in the device loop.
 
 Run:  PYTHONPATH=src python examples/spritz_failover.py
 """
@@ -7,9 +14,15 @@ import numpy as np
 
 from repro.net.sim import build as B
 from repro.net.sim import engine as E
-from repro.net.sim.types import ECMP, SPRAY_W, VALIANT, SCHEME_NAMES
+from repro.net.sim.failures import FailureSchedule
+from repro.net.sim.types import ECMP, OPS_U, SCHEME_NAMES, SCOUT, SPRAY_W
 from repro.net.topology.slimfly import make_slimfly
 from repro.net.workloads import permutation
+
+# 256-pkt flows inject for >= 256 ticks: failing at 128 is mid-flight,
+# and the outage spans several RTOs before healing (benchmarks.bench_failures
+# scales the same way)
+T_FAIL, T_RECOVER = 128, 4224
 
 topo = make_slimfly(5, p=2)
 print(f"Slim Fly MMS q=5: {topo.n_endpoints} endpoints, "
@@ -20,14 +33,16 @@ links = [(s, int(topo.nbr[s, r])) for s in range(topo.n_switches)
          for r in range(topo.radix) if topo.nbr[s, r] >= 0]
 n_fail = max(2, len(links) // 50)  # ~2%
 failed = [links[i] for i in rng.choice(len(links), n_fail, replace=False)]
-print(f"failing {n_fail} links: {failed[:4]}{'...' if n_fail > 4 else ''}")
+print(f"t={T_FAIL}: failing {n_fail} links {failed[:4]}"
+      f"{'...' if n_fail > 4 else ''};  t={T_RECOVER}: recovering them")
 
+sched = FailureSchedule(topo).fail_links(T_FAIL, failed).recover(T_RECOVER)
 flows = permutation(topo, size_pkts=256, seed=1)
 # every scheme is a lane of one batched device program (DESIGN.md §5);
 # the event-compressed driver jumps the RTO dead-time on failed links
-schemes = [ECMP, VALIANT, SPRAY_W]
+schemes = [ECMP, OPS_U, SPRAY_W, SCOUT]
 base = B.build_spec(topo, flows, SPRAY_W, n_ticks=1 << 17,
-                    failed_links=failed)
+                    failure_plan=sched, block_ticks=1 << 10)
 for scheme, res in zip(schemes, E.run_batch(base, schemes=schemes)):
     fct = B.ticks_to_us(res.fct_ticks[res.done])
     print(f"{SCHEME_NAMES[scheme]:14s} done {res.done.mean()*100:5.1f}%  "
@@ -35,6 +50,7 @@ for scheme, res in zip(schemes, E.run_batch(base, schemes=schemes)):
           f"timeouts {res.timeouts.sum():5d}  trims {res.trims.sum():5d}  "
           f"x{res.compression:.1f} compression")
 
-print("\nSpritz blocks timed-out EVs (w_i=0 + block timer) and keeps only "
-      "verified-good paths in its cache; ECMP flows hash onto dead links "
-      "and can only retransmit into the void.")
+print("\nOn the down transition Spritz senders see trims/timeouts, zero the "
+      "dead EVs' weights and ride the verified-good buffer; after recovery "
+      "the block timer expires and Scout re-caches the healed paths.  ECMP "
+      "flows stay hashed onto dead links for the whole outage.")

@@ -117,16 +117,27 @@ def send_logic(state: SpritzState, cfg: SpritzConfig, rng: jax.Array,
     explore = state.packet_count >= cfg.explore_threshold
     buf_front = state.buffer[:, 0]
     buf_nonempty = buf_front >= 0
-    use_buffer = (~explore) & buf_nonempty
+    # §IV-C timer: a buffered EV whose timeout-block is still running must
+    # not be reused — e.g. a path that died *after* it was cached.  The
+    # sender falls back to weighted sampling (which also zeroes blocked
+    # paths); Spray additionally consumes the dead front so its circular
+    # walk skips over still-blocked EVs instead of wedging on one.
+    front_blocked = buf_nonempty & (
+        jnp.take_along_axis(state.blocked_until,
+                            jnp.maximum(buf_front, 0)[:, None],
+                            axis=1)[:, 0] > t)
+    use_buffer = (~explore) & buf_nonempty & ~front_blocked
 
     ev = jnp.where(use_buffer, buf_front, sampled)
 
-    # Spray consumes the front slot on use
+    # Spray consumes the front slot whenever the walk consults the buffer —
+    # either using a live front or discarding a blocked one.  Explore ticks
+    # never consult it, so they leave the buffer untouched (Algorithm 1).
     popped = jnp.concatenate(
         [state.buffer[:, 1:], jnp.full((state.buffer.shape[0], 1), -1, jnp.int32)],
         axis=1,
     )
-    pop = use_buffer & (cfg.variant == SPRAY) & active
+    pop = (~explore) & buf_nonempty & (cfg.variant == SPRAY) & active
     new_buffer = jnp.where(pop[:, None], popped, state.buffer)
 
     new_count = jnp.where(explore, 0, state.packet_count + 1)

@@ -215,7 +215,8 @@ def run_cell(arch: str, shape, multi_pod: bool, out_dir: Path,
                     v = getattr(ma, f, None)
                     if v is not None:
                         rec[f] = int(v)
-            ca = compiled.cost_analysis() or {}
+            from repro.launch.hlo_analysis import xla_cost_analysis
+            ca = xla_cost_analysis(compiled)
             rec["flops"] = float(ca.get("flops", -1))
             rec["bytes_accessed"] = float(ca.get("bytes accessed", -1))
             text = compiled.as_text()

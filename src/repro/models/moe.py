@@ -14,6 +14,15 @@ import numpy as np
 from repro.models.common import ModelCfg, init_mlp, apply_mlp, shard_hint
 from repro.models import common as _common
 
+try:  # modern API (jax >= 0.8)
+    from jax import shard_map
+except ImportError:  # jax 0.4.x: experimental home, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_04x(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
 
 def init_moe(key, cfg: ModelCfg):
     me = cfg.moe
@@ -147,7 +156,6 @@ def _local_dispatch(xt, probs, top_k: int, cap: int, n_exp: int):
 def _apply_moe_ep(p, x, cfg: ModelCfg, ctx, tp: int):
     me = cfg.moe
     B, S, d = x.shape
-    from jax import shard_map  # modern API (jax >= 0.8)
     from jax.sharding import PartitionSpec as P
     dp = ctx["dp"]
     tpa = ctx["tp"]
@@ -214,7 +222,6 @@ def _apply_moe_ep_fshard(p, x, cfg: ModelCfg, ctx, tp: int):
     f/tp per device)."""
     me = cfg.moe
     B, S, d = x.shape
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
     dp, tpa, mesh = ctx["dp"], ctx["tp"], ctx["mesh"]
     E = me.n_experts

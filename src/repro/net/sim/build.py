@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.net import paths as P
 from repro.net.sim.types import (ECMP, MINIMAL, OPS_U, SCOUT, SPRAY_U,
-                                 SPRAY_W, SimSpec)
+                                 SPRAY_W, FailurePlan, SimSpec)
 from repro.net.topology.base import TICK_NS, Topology
 
 H_MAX = 7  # max switch hops (6) + delivery port
@@ -41,10 +41,12 @@ def build_spec(
     max_paths: int = 64,
     n_ticks: int = 1 << 20,
     failed_links: list[tuple[int, int]] | None = None,
+    failure_plan=None,
     seed: int = 0,
     n_pkt_cap: int = 1 << 16,
     explore_threshold: int | None = None,
     ecn_threshold: int | None = None,
+    block_ticks: int | None = None,
 ) -> SimSpec:
     rng = np.random.default_rng(seed)
     F = len(flows)
@@ -129,6 +131,17 @@ def build_spec(
         port_failed[topo.port_id(u, topo.slot_of_edge[(u, v)])] = True
         port_failed[topo.port_id(v, topo.slot_of_edge[(v, u)])] = True
 
+    # failure timeline (DESIGN.md §10): accept a compiled FailurePlan or an
+    # uncompiled FailureSchedule; validate ports against this topology.
+    if failure_plan is None:
+        plan = FailurePlan(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                           np.zeros(0, bool))
+    else:
+        plan = (failure_plan.compile() if hasattr(failure_plan, "compile")
+                else failure_plan)
+        if plan.n_events and int(plan.port_id.max()) >= topo.n_ports:
+            raise ValueError("failure plan references ports outside topology")
+
     n_pkt = int(min(
         n_pkt_cap,
         sum(min(fl.size_pkts, int(cwnd_max) + 4) for fl in flows) + 64,
@@ -166,10 +179,14 @@ def build_spec(
         rem_ticks=rem_ticks,
         port_lat=port_lat,
         port_failed=port_failed,
+        fail_event_tick=plan.event_tick,
+        fail_event_port=plan.port_id,
+        fail_event_up=plan.port_up,
         explore_threshold=(explore_threshold if explore_threshold is not None
                            else max(4, bdp // 2)),
         ecn_threshold=(ecn_threshold if ecn_threshold is not None
                        else max(2, bdp // 10)),
+        **({} if block_ticks is None else dict(block_ticks=block_ticks)),
     )
 
 

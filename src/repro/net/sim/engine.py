@@ -57,6 +57,10 @@ _ONEHOT_CELLS = 1 << 22
 class Carry(NamedTuple):
     rng: jax.Array             # base PRNG key (constant; per-tick via fold_in)
     q_tail: jax.Array          # [n_ports] i32
+    # failure timeline (DESIGN.md §10): live link state + next-event cursor
+    port_up: jax.Array         # [n_ports] bool
+    fail_idx: jax.Array        # [] i32 — first unapplied timeline event
+    viol: jax.Array            # [] i32 — services across a down port (== 0)
     # packet table
     pstate: jax.Array          # [N] i32
     pflow: jax.Array           # [N] i32
@@ -143,7 +147,6 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
     ret_ticks = jnp.asarray(spec.ret_ticks, jnp.int32)        # [F,P]
     rem_ticks = jnp.asarray(spec.rem_ticks, jnp.int32)        # [F,P,H]
     port_lat = jnp.asarray(spec.port_lat, jnp.int32)          # [ports]
-    port_failed = jnp.asarray(spec.port_failed, bool)
     src_ep = jnp.asarray(spec.src_ep, jnp.int32)
     size_pkts = jnp.asarray(spec.size_pkts, jnp.int32)
     start_tick = jnp.asarray(spec.start_tick, jnp.int32)
@@ -151,6 +154,13 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
     bg_mask = jnp.asarray(spec.bg_mask, bool)
     has_dep = bool((spec.dep >= 0).any())
     has_bg = bool(spec.bg_mask.any())
+
+    # failure timeline (DESIGN.md §10); E == 0 (static network) removes the
+    # whole event phase from the traced program
+    E_EV = len(spec.fail_event_tick)
+    fev_tick = jnp.asarray(spec.fail_event_tick, jnp.int32)   # [E]
+    fev_port = jnp.asarray(spec.fail_event_port, jnp.int32)   # [E]
+    fev_up = jnp.asarray(spec.fail_event_up, bool)            # [E]
 
     n_eps = int(spec.src_ep.max()) + 1 if len(spec.src_ep) else 1
     # Per-tick enqueue bound: each port services <= 1 pkt/tick and per-port
@@ -211,7 +221,46 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
     def tick(c: Carry, t, lane: Lane | None = None):
         k_path, k_mark = _tick_keys(c.rng, t)
         t = t.astype(jnp.int32)
-        occ = jnp.maximum(c.q_tail - t, 0)
+
+        # ------------- A0. failure timeline events (DESIGN.md §10) ----------
+        # Apply every event with tick <= t past the cursor (the horizon stops
+        # at each event tick, so in the compressed driver that set is exactly
+        # this tick's events; the dense stepper sees the same sets tick by
+        # tick).  Last event per port wins — a scatter-max over event index.
+        port_up, fail_idx = c.port_up, c.fail_idx
+        q_tail0, pstate0, pevent0, trims0 = c.q_tail, c.pstate, c.pevent, \
+            c.trims
+        if E_EV:
+            eidx = jnp.arange(E_EV, dtype=jnp.int32)
+            due = (eidx >= fail_idx) & (fev_tick <= t)
+            last = jnp.full(NP_ + 1, -1, jnp.int32).at[
+                jnp.where(due, fev_port, NP_)].max(
+                jnp.where(due, eidx, -1))[:NP_]
+            new_up = jnp.where(last >= 0, fev_up[jnp.maximum(last, 0)],
+                               port_up)
+            went_down = port_up & ~new_up
+            port_up = new_up
+            fail_idx = fail_idx + jnp.sum(due.astype(jnp.int32))
+            # in-flight semantics on a down transition: packets still queued
+            # at the dying port are trimmed back (header NACK — the switch
+            # drains its dead egress queue), packets already on the wire are
+            # black-holed (P_LOST -> sender RTO); the analytic queue empties.
+            cur0 = path_ports[c.pflow, c.ppath, c.phop]
+            hit = went_down[jnp.clip(cur0, 0, NP_ - 1)]
+            killq = (c.pstate == P_QUEUED) & hit
+            killp = (c.pstate == P_PROP) & hit
+            nack_at0 = t + rem_ticks[c.pflow, c.ppath,
+                                     jnp.minimum(c.phop,
+                                                 rem_ticks.shape[2] - 1)]
+            pstate0 = jnp.where(killq, P_NACKWAIT,
+                                jnp.where(killp, P_LOST, c.pstate))
+            pevent0 = jnp.where(killq, nack_at0, c.pevent)
+            trims0 = c.trims + jnp.zeros(F + 1, jnp.int32).at[
+                jnp.where(killq, c.pflow, F)].add(1)[:F]
+            q_tail0 = jnp.where(went_down, jnp.minimum(c.q_tail, t),
+                                c.q_tail)
+
+        occ = jnp.maximum(q_tail0 - t, 0)
         if batched:
             scheme = lane.scheme
             weights = lane.weights
@@ -225,9 +274,9 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
             is_spritz = scheme_s in SPRITZ_SCHEMES
 
         # ---------------- A. feedback arrivals + timeouts -------------------
-        ack_m = (c.pstate == P_ACKWAIT) & (c.pevent == t)
-        nack_m = (c.pstate == P_NACKWAIT) & (c.pevent == t)
-        inflight_states = (c.pstate == P_QUEUED) | (c.pstate == P_PROP) | (c.pstate == P_LOST)
+        ack_m = (pstate0 == P_ACKWAIT) & (pevent0 == t)
+        nack_m = (pstate0 == P_NACKWAIT) & (pevent0 == t)
+        inflight_states = (pstate0 == P_QUEUED) | (pstate0 == P_PROP) | (pstate0 == P_LOST)
         to_m = inflight_states & (t - c.psent > spec.rto_ticks)
 
         # Per-flow sums as ONE one-hot GEMM instead of per-mask scatters
@@ -337,10 +386,10 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         fct = jnp.where(done_now, t - start_tick, c.fct)
 
         # free finished packet slots
-        pstate = jnp.where(ack_m | nack_m | to_m, P_FREE, c.pstate)
+        pstate = jnp.where(ack_m | nack_m | to_m, P_FREE, pstate0)
 
         # ---------------- B. service (dequeue) ------------------------------
-        svc = (pstate == P_QUEUED) & (c.pevent == t)
+        svc = (pstate == P_QUEUED) & (pevent0 == t)
         cur_port = path_ports[c.pflow, c.ppath, c.phop]
         plen = path_len[c.pflow, c.ppath]
         at_delivery = c.phop == plen - 1
@@ -358,8 +407,13 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         ooo = c.ooo + is_ooo.astype(jnp.int32)
         exp_psn = jnp.where(has_del, jnp.maximum(c.exp_psn, dpsn + 1), c.exp_psn)
 
+        # conformance counter: a service event must never cross a down port
+        # (the A0 kill rule + enqueue mask conspire to make this impossible)
+        viol = c.viol + jnp.sum((svc & ~port_up[
+            jnp.clip(cur_port, 0, NP_ - 1)]).astype(jnp.int32))
+
         ret = ret_ticks[c.pflow, c.ppath]
-        pevent = jnp.where(deliver, t + ret, c.pevent)
+        pevent = jnp.where(deliver, t + ret, pevent0)
         pstate = jnp.where(deliver, P_ACKWAIT, pstate)
         pevent = jnp.where(forward, t + port_lat[cur_port], pevent)
         pstate = jnp.where(forward, P_PROP, pstate)
@@ -478,7 +532,7 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         enq0 = arrive | injected_pkt
         eport_n = jnp.where(enq0, path_ports[pflow, ppath, phop], NP_)
         failed = enq0 & (eport_n < NP_) & \
-            port_failed[jnp.minimum(eport_n, NP_ - 1)]
+            ~port_up[jnp.minimum(eport_n, NP_ - 1)]
         enq = enq0 & ~failed
         pstate = jnp.where(failed, P_LOST, pstate)
 
@@ -501,7 +555,7 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         # FIFO rank among same-tick arrivals per port (compacted)
         rank = _enqueue_rank(cport)
 
-        tail_e = c.q_tail[jnp.minimum(cport, NP_ - 1)]
+        tail_e = q_tail0[jnp.minimum(cport, NP_ - 1)]
         occ_at = jnp.maximum(tail_e - t, 0) + rank
         trim = valid & (occ_at >= spec.qsize)
         accept = valid & ~(occ_at >= spec.qsize)
@@ -525,18 +579,19 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         pevent = _padded(pevent, 0).at[ctgt].set(
             jnp.where(valid, new_event, 0))[:N]
 
-        trims = c.trims + jnp.zeros(F + 1, jnp.int32).at[
+        trims = trims0 + jnp.zeros(F + 1, jnp.int32).at[
             jnp.where(trim, cflow, F)].add(1)[:F]
         timeouts = c.timeouts + n_to
         delivered = c.delivered + n_ack
 
         n_acc = jnp.zeros(NP_ + 1, jnp.int32).at[
             jnp.where(accept, cport, NP_)].add(1)[:NP_]
-        q_tail = jnp.where(n_acc > 0, jnp.maximum(c.q_tail, t) + n_acc,
-                           c.q_tail)
+        q_tail = jnp.where(n_acc > 0, jnp.maximum(q_tail0, t) + n_acc,
+                           q_tail0)
 
         return Carry(
             rng=c.rng, q_tail=q_tail,
+            port_up=port_up, fail_idx=fail_idx, viol=viol,
             pstate=pstate, pflow=pflow, ppath=ppath, phop=phop, pevent=pevent,
             pecn=pecn, pexp=pexp, psent=psent, ppsn=ppsn,
             next_seq=next_seq, acked=acked, retx_pend=retx_pend,
@@ -566,6 +621,12 @@ def build_horizon(spec: SimSpec):
     dep = jnp.asarray(spec.dep, jnp.int32)
     has_dep = bool((spec.dep >= 0).any())
     rto1 = jnp.int32(spec.rto_ticks + 1)
+    # failure timeline (DESIGN.md §10): the next unapplied event tick is a
+    # provable event — compression must never jump over a failure/recovery.
+    E_EV = len(spec.fail_event_tick)
+    fev_tick_x = jnp.concatenate([
+        jnp.asarray(spec.fail_event_tick, jnp.int32),
+        jnp.full((1,), INF_TICK, jnp.int32)])
 
     def horizon(c: Carry, t):
         live = ((c.pstate == P_QUEUED) | (c.pstate == P_PROP)
@@ -598,6 +659,8 @@ def build_horizon(spec: SimSpec):
         ev_cc = jnp.where(pend_round, t + 1, INF_TICK)
         h = jnp.minimum(jnp.minimum(ev_pkt, ev_rto),
                         jnp.minimum(ev_inj, ev_cc))
+        if E_EV:
+            h = jnp.minimum(h, fev_tick_x[jnp.minimum(c.fail_idx, E_EV)])
         return jnp.maximum(t + 1, h)
 
     return horizon
@@ -609,9 +672,20 @@ def init_carry(spec: SimSpec, seed: int = 0,
     F, N = spec.n_flows, spec.n_pkt
     w = spec.weights if weights is None else weights
     sp = spec.static_path if static_path is None else static_path
+    # timeline events at tick <= 0 are initial conditions (DESIGN.md §10):
+    # folding them here makes a t=0 plan bit-identical — including
+    # steps_executed — to a static ``failed_links`` build.
+    port_up0 = ~np.asarray(spec.port_failed, bool)
+    n0 = int(np.searchsorted(spec.fail_event_tick, 0, side="right"))
+    if n0:
+        port_up0 = port_up0.copy()
+        for i in range(n0):
+            port_up0[spec.fail_event_port[i]] = bool(spec.fail_event_up[i])
     carry = Carry(
         rng=jax.random.PRNGKey(seed),
         q_tail=jnp.zeros(spec.n_ports, jnp.int32),
+        port_up=jnp.asarray(port_up0),
+        fail_idx=jnp.int32(n0), viol=jnp.int32(0),
         pstate=jnp.zeros(N, jnp.int32), pflow=jnp.zeros(N, jnp.int32),
         ppath=jnp.zeros(N, jnp.int32), phop=jnp.zeros(N, jnp.int32),
         pevent=jnp.zeros(N, jnp.int32), pecn=jnp.zeros(N, bool),
@@ -725,12 +799,13 @@ def _result(carry: Carry, t, steps) -> SimResult:
         done=np.asarray(carry.fct >= 0),
         ticks_simulated=int(t),
         steps_executed=int(steps),
+        down_violations=int(carry.viol),
     )
 
 
 def run(spec: SimSpec, seed: int = 0, chunk: int | None = None,
         stop_flows: np.ndarray | None = None,
-        reference: bool = False) -> SimResult:
+        reference: bool = False, return_carry: bool = False):
     """Run the simulation for up to ``spec.n_ticks`` virtual ticks.
 
     The driver is a single donated device-side while_loop that stops as
@@ -738,7 +813,10 @@ def run(spec: SimSpec, seed: int = 0, chunk: int | None = None,
     ``reference=True`` selects the dense tick-by-tick stepper (the
     bit-exact oracle for the event-compressed default).  ``chunk`` is
     accepted for backwards compatibility and ignored: there is no chunked
-    host loop any more.
+    host loop any more.  ``return_carry=True`` additionally returns the
+    final :class:`Carry` as a dict of NumPy arrays — the observability
+    hook the conservation/conformance property suites audit
+    (``tests/test_failures.py``).
     """
     del chunk
     watch = jnp.asarray(_watch_mask(spec, stop_flows))
@@ -748,7 +826,14 @@ def run(spec: SimSpec, seed: int = 0, chunk: int | None = None,
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
         carry, t, steps = runner(init_carry(spec, seed), watch)
-    return _result(carry, t, steps)
+    res = _result(carry, t, steps)
+    if return_carry:
+        state = {k: np.asarray(v) for k, v in carry._asdict().items()
+                 if k != "spritz"}
+        state["spritz"] = {k: np.asarray(v)
+                           for k, v in carry.spritz._asdict().items()}
+        return res, state
+    return res
 
 
 run_reference = partial(run, reference=True)

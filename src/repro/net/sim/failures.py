@@ -1,0 +1,151 @@
+"""Host-side failure/recovery schedule builder (DESIGN.md §10).
+
+Declarative front-end for the engine's failure timeline: scenarios say
+*what* fails and *when* in topology terms (links, switches, flapping
+periods) and :meth:`FailureSchedule.compile` lowers that to the sorted
+per-port event arrays a :class:`~repro.net.sim.types.FailurePlan` holds.
+
+    sched = FailureSchedule(topo)
+    sched.fail_links(at=2048, links=[(0, 5), (3, 7)])
+    sched.recover(at=32768)                    # everything currently down
+    sched.flap(links=[(1, 2)], period=4096, until=1 << 16)
+    spec = build_spec(topo, flows, SPRAY_W, failure_plan=sched)
+
+A link is an undirected switch pair ``(u, v)``: both directed ports go
+down/up together.  A switch failure takes every port that touches the
+switch — its egress ports, each neighbor's port pointing at it, and the
+delivery ports of its endpoints.  ACK/NACK reverse paths are abstract
+(prop-only ``ret_ticks``) and never fail — see DESIGN.md §10.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.net.sim.types import FailurePlan
+from repro.net.topology.base import Topology
+
+
+class FailureSchedule:
+    """Accumulates (tick, port, up) declarations; ``compile()`` sorts them
+    stably by tick so later declarations win within a tick."""
+
+    def __init__(self, topo: Topology):
+        self.topo = topo
+        self._ev: list[tuple[int, int, bool]] = []
+
+    # ------------------------------------------------------------- resolvers
+    def _link_ports(self, u: int, v: int) -> list[int]:
+        topo = self.topo
+        try:
+            return [topo.port_id(u, topo.slot_of_edge[(u, v)]),
+                    topo.port_id(v, topo.slot_of_edge[(v, u)])]
+        except KeyError:
+            raise ValueError(f"no link between switches {u} and {v}")
+
+    def _switch_ports(self, sw: int) -> list[int]:
+        topo = self.topo
+        ports = []
+        for r in range(topo.radix):
+            nb = int(topo.nbr[sw, r])
+            if nb < 0:
+                continue
+            ports.append(topo.port_id(sw, r))
+            ports.append(topo.port_id(nb, topo.slot_of_edge[(nb, sw)]))
+        for ep in range(sw * topo.eps_per_switch,
+                        (sw + 1) * topo.eps_per_switch):
+            ports.append(topo.delivery_port(ep))
+        return ports
+
+    # ----------------------------------------------------------- primitives
+    def set_ports(self, at: int, ports, up: bool) -> "FailureSchedule":
+        """Low-level: schedule raw port ids to a state at a tick."""
+        if at < 0:
+            raise ValueError(f"event tick must be >= 0, got {at}")
+        for p in ports:
+            p = int(p)
+            if not 0 <= p < self.topo.n_ports:
+                raise ValueError(f"port {p} out of range")
+            self._ev.append((int(at), p, bool(up)))
+        return self
+
+    # ----------------------------------------------------------- link level
+    def fail_links(self, at: int, links) -> "FailureSchedule":
+        for (u, v) in links:
+            self.set_ports(at, self._link_ports(u, v), up=False)
+        return self
+
+    def recover_links(self, at: int, links) -> "FailureSchedule":
+        for (u, v) in links:
+            self.set_ports(at, self._link_ports(u, v), up=True)
+        return self
+
+    def recover(self, at: int) -> "FailureSchedule":
+        """Recover every port scheduled down before ``at`` (and not already
+        recovered by then) — 'the outage ends here'."""
+        down = set()
+        for t, p, up in sorted(self._ev, key=lambda e: e[0]):
+            if t >= at:
+                continue
+            (down.add if not up else down.discard)(p)
+        return self.set_ports(at, sorted(down), up=True)
+
+    def fail_switch(self, at: int, switch: int) -> "FailureSchedule":
+        return self.set_ports(at, self._switch_ports(switch), up=False)
+
+    def recover_switch(self, at: int, switch: int) -> "FailureSchedule":
+        return self.set_ports(at, self._switch_ports(switch), up=True)
+
+    def flap(self, links, period: int, *, at: int = 0,
+             until: int, down_frac: float = 0.5) -> "FailureSchedule":
+        """Periodic fail/recover: down at ``at + k*period`` and back up
+        ``down_frac`` of a period later, for all cycles before ``until``.
+        The links are healthy after the window — a final down-phase that
+        would outlive ``until`` is cut short by a recovery at ``until``."""
+        if period <= 0:
+            raise ValueError("flap period must be positive")
+        down_ticks = max(1, int(round(period * down_frac)))
+        if down_ticks >= period:
+            raise ValueError("down_frac must leave up-time within a period")
+        t = int(at)
+        while t < until:
+            self.fail_links(t, links)
+            self.recover_links(min(t + down_ticks, until), links)
+            t += period
+        return self
+
+    # -------------------------------------------------------------- compile
+    def compile(self) -> FailurePlan:
+        order = sorted(range(len(self._ev)),
+                       key=lambda i: (self._ev[i][0], i))
+        return FailurePlan(
+            event_tick=np.asarray([self._ev[i][0] for i in order], np.int32),
+            port_id=np.asarray([self._ev[i][1] for i in order], np.int32),
+            port_up=np.asarray([self._ev[i][2] for i in order], bool),
+        )
+
+
+def all_links(topo: Topology) -> list[tuple[int, int]]:
+    """Every undirected switch-switch link, one ``(u, v)`` per pair."""
+    seen, out = set(), []
+    for s in range(topo.n_switches):
+        for r in range(topo.radix):
+            v = int(topo.nbr[s, r])
+            if v >= 0 and (v, s) not in seen:
+                seen.add((s, v))
+                out.append((s, v))
+    return out
+
+
+def sample_links(topo: Topology, k: int, seed: int = 0
+                 ) -> list[tuple[int, int]]:
+    """``k`` distinct undirected links, uniformly sampled — the common
+    fixture for failure scenarios (benchmarks and tests share it)."""
+    links = all_links(topo)
+    rng = np.random.default_rng(seed)
+    return [links[i] for i in rng.choice(len(links), k, replace=False)]
+
+
+def static_plan(topo: Topology, links, at: int = 0) -> FailurePlan:
+    """Plan equivalent of a ``failed_links=`` build: the given links go down
+    at tick ``at`` (default 0 — folded into the initial mask) and stay down."""
+    return FailureSchedule(topo).fail_links(at, links).compile()

@@ -34,6 +34,61 @@ P_FREE, P_QUEUED, P_PROP, P_ACKWAIT, P_NACKWAIT, P_LOST = 0, 1, 2, 3, 4, 5
 FB_ACK_OK, FB_ACK_ECN, FB_NACK, FB_TIMEOUT, FB_NONE = 0, 1, 2, 3, 4
 
 
+def _empty_i32() -> np.ndarray:
+    return np.zeros(0, np.int32)
+
+
+def _empty_bool() -> np.ndarray:
+    return np.zeros(0, bool)
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    """Time-scheduled port up/down events (DESIGN.md §10).
+
+    Sorted by ``event_tick`` (stable in declaration order for ties — the
+    last event at a tick wins per port).  Events at tick <= 0 are initial
+    conditions: the engine folds them into the starting ``port_up`` mask,
+    so a plan whose down-events all fire at t=0 is bit-identical to a
+    static ``failed_links`` build.  Usually produced by
+    :class:`repro.net.sim.failures.FailureSchedule`, not by hand.
+    """
+
+    event_tick: np.ndarray           # [E] i32, sorted ascending
+    port_id: np.ndarray              # [E] i32
+    port_up: np.ndarray              # [E] bool (True = link recovers)
+
+    def __post_init__(self):
+        self.event_tick = np.asarray(self.event_tick, np.int32)
+        self.port_id = np.asarray(self.port_id, np.int32)
+        self.port_up = np.asarray(self.port_up, bool)
+        if not (len(self.event_tick) == len(self.port_id)
+                == len(self.port_up)):
+            raise ValueError("FailurePlan arrays must share one length")
+        if len(self.event_tick) and (np.diff(self.event_tick) < 0).any():
+            raise ValueError("FailurePlan events must be sorted by tick")
+        if len(self.event_tick) and (self.event_tick < 0).any():
+            raise ValueError("FailurePlan event ticks must be >= 0")
+        if len(self.port_id) and (self.port_id < 0).any():
+            raise ValueError("FailurePlan port ids must be >= 0")
+
+    @property
+    def n_events(self) -> int:
+        return len(self.event_tick)
+
+    def port_state_at(self, t: int, n_ports: int,
+                      initial: np.ndarray | None = None) -> np.ndarray:
+        """Host-side oracle: the up/down mask the engine holds *during*
+        tick ``t`` (events at tick <= t applied, in order)."""
+        up = (np.ones(n_ports, bool) if initial is None
+              else np.asarray(initial, bool).copy())
+        for i in range(self.n_events):
+            if self.event_tick[i] > t:
+                break
+            up[self.port_id[i]] = bool(self.port_up[i])
+        return up
+
+
 @dataclasses.dataclass
 class SimSpec:
     """Host-built static spec: all arrays are NumPy, converted once by run()."""
@@ -70,7 +125,19 @@ class SimSpec:
     ret_ticks: np.ndarray            # [F, P] ACK return latency (ticks)
     rem_ticks: np.ndarray            # [F, P, H] fwd prop remaining from hop h
     port_lat: np.ndarray             # [n_ports] per-link prop+switch ticks
-    port_failed: np.ndarray          # [n_ports] bool
+    port_failed: np.ndarray          # [n_ports] bool — link state before the
+    #   first timeline event (failed_links= builds set it; timeline events at
+    #   tick <= 0 are folded on top by the engine's init)
+
+    # failure timeline (DESIGN.md §10): compiled FailurePlan arrays.  Empty
+    # arrays (the default) mean a static network — the engine skips the
+    # whole event phase at trace time.
+    fail_event_tick: np.ndarray = dataclasses.field(
+        default_factory=_empty_i32)  # [E] i32 sorted
+    fail_event_port: np.ndarray = dataclasses.field(
+        default_factory=_empty_i32)  # [E] i32
+    fail_event_up: np.ndarray = dataclasses.field(
+        default_factory=_empty_bool)  # [E] bool
 
     # spritz
     explore_threshold: int = 44
@@ -106,6 +173,10 @@ class SimResult(NamedTuple):
     # actually executed — their ratio is the event-compression factor.
     ticks_simulated: int = -1
     steps_executed: int = -1
+    # conformance counter (DESIGN.md §10): services across a down port.
+    # The kill rule + enqueue mask must keep this at exactly 0; the
+    # failover property suite asserts it.
+    down_violations: int = 0
 
     @property
     def compression(self) -> float:

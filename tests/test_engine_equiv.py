@@ -11,9 +11,10 @@ import pytest
 
 from repro.net.sim import build as B
 from repro.net.sim import engine as E
-from repro.net.sim.types import (ECMP, FLICR_W, MINIMAL, OPS_W, SCHEME_NAMES,
-                                 SCOUT, SPRAY_U, SPRAY_W, SPRITZ_SCHEMES,
-                                 UGAL_L, VALIANT)
+from repro.net.sim.failures import FailureSchedule, sample_links, static_plan
+from repro.net.sim.types import (ECMP, FLICR_W, MINIMAL, OPS_U, OPS_W,
+                                 SCHEME_NAMES, SCOUT, SPRAY_U, SPRAY_W,
+                                 SPRITZ_SCHEMES, UGAL_L, VALIANT)
 from repro.net.topology.dragonfly import make_dragonfly
 from repro.net.topology.slimfly import make_slimfly
 
@@ -72,6 +73,76 @@ def test_lane_arrays_uniform_and_minimal():
     from repro.net.sim.types import MINIMAL
     _, sp = E.lane_arrays(base, MINIMAL)
     assert np.array_equal(sp, base.min_path)  # no bg flows here
+
+
+# ----------------------------------------------------- failure timeline --
+ALL_SCHEMES = [MINIMAL, VALIANT, UGAL_L, ECMP, FLICR_W, OPS_U, OPS_W,
+               SCOUT, SPRAY_U, SPRAY_W]
+
+# larger flows so failures land mid-flight (FLOWS finish before tick 60)
+FAIL_FLOWS = [B.Flow(e, 40 + (e % 3), 400, start_tick=4 * e)
+              for e in range(8)]
+
+
+@pytest.mark.parametrize("topo", [DF, SF], ids=lambda t: t.name)
+def test_t0_plan_matches_static_failed_links(topo):
+    """Satellite: a FailurePlan whose down-events all fire at t=0 is
+    bit-identical — per-flow FCT, drops, steps_executed — to the static
+    ``failed_links=`` build, for every scheme (one batched run each)."""
+    links = sample_links(topo, 4, seed=3)
+    kw = dict(n_ticks=1 << 12, n_pkt_cap=1 << 12)
+    spec_static = B.build_spec(topo, FLOWS, SPRAY_W, failed_links=links, **kw)
+    spec_plan = B.build_spec(topo, FLOWS, SPRAY_W,
+                             failure_plan=static_plan(topo, links), **kw)
+    got_s = E.run_batch(spec_static, schemes=ALL_SCHEMES, seeds=[0])
+    got_p = E.run_batch(spec_plan, schemes=ALL_SCHEMES, seeds=[0])
+    for scheme, rs, rp in zip(ALL_SCHEMES, got_s, got_p):
+        _assert_same(rs, rp, (topo.name, SCHEME_NAMES[scheme]))
+        assert rs.steps_executed == rp.steps_executed, SCHEME_NAMES[scheme]
+        assert rs.ticks_simulated == rp.ticks_simulated, SCHEME_NAMES[scheme]
+
+
+def _midrun_schedule(topo):
+    links = sample_links(topo, 4, seed=3)
+    return (FailureSchedule(topo)
+            .fail_links(60, links)
+            .recover(2000)
+            .flap(links[:1], period=512, at=2100, until=4200))
+
+
+@pytest.mark.parametrize("topo,scheme",
+                         [(DF, SCOUT), (DF, SPRAY_U), (DF, ECMP),
+                          (SF, SPRAY_W)],
+                         ids=lambda x: (x.name if hasattr(x, "name")
+                                        else SCHEME_NAMES[x]))
+def test_compressed_matches_dense_with_timeline(topo, scheme):
+    """The horizon must treat every scheduled failure/recovery tick as a
+    provable event: jumping over one would desynchronize the port mask
+    from the dense reference."""
+    spec = B.build_spec(topo, FAIL_FLOWS, scheme, n_ticks=1 << 14,
+                        failure_plan=_midrun_schedule(topo),
+                        block_ticks=2048)
+    res = E.run(spec)
+    ref = E.run(spec, reference=True)
+    _assert_same(res, ref, (topo.name, SCHEME_NAMES[scheme]))
+    assert res.steps_executed <= ref.steps_executed
+    assert res.ticks_simulated == ref.ticks_simulated
+    assert res.down_violations == 0 == ref.down_violations
+    # the scenario is non-trivial: the failure actually hit traffic
+    assert res.trims.sum() + res.timeouts.sum() > 0
+
+
+def test_run_batch_matches_solo_under_failure_plan():
+    """Satellite: batched lanes must not cross-talk through the new
+    time-varying carry (port_up mask / event cursor)."""
+    schemes = [ECMP, OPS_U, SCOUT, SPRAY_W]
+    base = B.build_spec(DF, FAIL_FLOWS, SPRAY_W, n_ticks=1 << 14,
+                        failure_plan=_midrun_schedule(DF), block_ticks=2048)
+    batch = E.run_batch(base, schemes=schemes, seeds=[0])
+    for (scheme, seed), bres in zip(E.batch_lanes(schemes, [0]), batch):
+        solo = E.run(B.respec_scheme(base, scheme), seed=seed)
+        _assert_same(bres, solo, SCHEME_NAMES[scheme])
+        assert bres.down_violations == 0
 
 
 def test_compression_counters_present_and_sane():

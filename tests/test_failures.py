@@ -1,0 +1,304 @@
+"""Failure-timeline conformance suite (DESIGN.md §10).
+
+Covers the host-side schedule builder, the Spritz §IV-C failover story
+(timeout-block, skip-blocked-EV consumption, post-recovery re-probe), the
+engine's in-flight packet semantics on a down transition, and — under
+``hypothesis`` — the two timeline invariants: no service ever crosses a
+down port, and packet conservation holds under arbitrary fail/recover
+schedules.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (DESIGN.md §7): only @given tests
+    from conftest import hyp_stubs  # skip; the rest of the module runs
+    given, settings, st = hyp_stubs()
+
+from repro.core import spritz as S
+from repro.net.sim import build as B
+from repro.net.sim import engine as E
+from repro.net.sim.failures import FailureSchedule, sample_links
+from repro.net.sim.types import (ECMP, OPS_U, P_ACKWAIT, P_LOST, P_NACKWAIT,
+                                 P_PROP, P_QUEUED, SCOUT, SPRAY_U, SPRAY_W,
+                                 FailurePlan)
+from repro.net.topology.dragonfly import make_dragonfly
+
+DF = make_dragonfly(4, 2, 2)
+
+
+def _links(topo, n=4, seed=3):
+    return sample_links(topo, n, seed=seed)
+
+
+# ------------------------------------------------------- plan / schedule --
+def test_failure_plan_validates():
+    i32 = np.int32
+    with pytest.raises(ValueError, match="sorted"):
+        FailurePlan(np.asarray([5, 3], i32), np.asarray([0, 1], i32),
+                    np.asarray([False, False]))
+    with pytest.raises(ValueError, match=">= 0"):
+        FailurePlan(np.asarray([-2], i32), np.asarray([0], i32),
+                    np.asarray([False]))
+    with pytest.raises(ValueError, match="length"):
+        FailurePlan(np.asarray([1], i32), np.asarray([0, 1], i32),
+                    np.asarray([False]))
+    with pytest.raises(ValueError, match="port ids"):
+        FailurePlan(np.asarray([1], i32), np.asarray([-3], i32),
+                    np.asarray([False]))
+
+
+def test_schedule_link_events_both_directions():
+    u, v = 0, int(DF.nbr[0, 0])
+    plan = FailureSchedule(DF).fail_links(10, [(u, v)]).compile()
+    assert plan.n_events == 2 and (plan.event_tick == 10).all()
+    pu = DF.port_id(u, DF.slot_of_edge[(u, v)])
+    pv = DF.port_id(v, DF.slot_of_edge[(v, u)])
+    assert set(plan.port_id.tolist()) == {pu, pv}
+    assert not plan.port_up.any()
+    with pytest.raises(ValueError, match="no link"):
+        FailureSchedule(DF).fail_links(0, [(0, 0)])
+
+
+def test_schedule_recover_picks_up_everything_down():
+    links = _links(DF, 3)
+    sched = (FailureSchedule(DF).fail_links(100, links)
+             .recover_links(500, links[:1])     # early partial recovery
+             .fail_links(600, links[:1])        # ...and it dies again
+             .recover(1000))
+    plan = sched.compile()
+    up = plan.port_state_at(1000, DF.n_ports)
+    assert up.all()                             # outage fully over
+    assert not plan.port_state_at(700, DF.n_ports).all()
+    # sorted stably, ticks ascending
+    assert (np.diff(plan.event_tick) >= 0).all()
+
+
+def test_schedule_flap_alternates_within_bounds():
+    link = [(0, int(DF.nbr[0, 0]))]
+    plan = (FailureSchedule(DF)
+            .flap(link, period=100, at=50, until=500).compile())
+    assert (plan.event_tick >= 50).all() and (plan.event_tick <= 500).all()
+    assert plan.port_state_at(500, DF.n_ports).all()  # healthy after window
+    # per flapped port: strictly alternating down/up in time order
+    for p in set(plan.port_id.tolist()):
+        ups = plan.port_up[plan.port_id == p]
+        assert not ups[0]                       # starts by going down
+        assert (ups[1:] != ups[:-1]).all()
+    with pytest.raises(ValueError, match="period"):
+        FailureSchedule(DF).flap(link, period=0, until=100)
+    with pytest.raises(ValueError, match="down_frac"):
+        FailureSchedule(DF).flap(link, period=4, down_frac=1.0, until=100)
+
+
+def test_schedule_fail_switch_covers_all_touching_ports():
+    sw = 5
+    plan = FailureSchedule(DF).fail_switch(20, sw).compile()
+    ports = set(plan.port_id.tolist())
+    for r in range(DF.radix):
+        nb = int(DF.nbr[sw, r])
+        if nb < 0:
+            continue
+        assert DF.port_id(sw, r) in ports                      # egress
+        assert DF.port_id(nb, DF.slot_of_edge[(nb, sw)]) in ports  # ingress
+    for ep in range(sw * DF.eps_per_switch, (sw + 1) * DF.eps_per_switch):
+        assert DF.delivery_port(ep) in ports                   # delivery
+    assert not plan.port_up.any()
+
+
+def test_build_spec_rejects_out_of_range_plan():
+    plan = FailurePlan(np.asarray([1], np.int32),
+                       np.asarray([DF.n_ports + 7], np.int32),
+                       np.asarray([False]))
+    with pytest.raises(ValueError, match="outside topology"):
+        B.build_spec(DF, [B.Flow(0, 40, 8)], ECMP, failure_plan=plan)
+
+
+def test_port_state_at_oracle():
+    p = DF.port_id(0, 0)
+    plan = FailurePlan(np.asarray([5, 9], np.int32),
+                       np.asarray([p, p], np.int32),
+                       np.asarray([False, True]))
+    assert plan.port_state_at(4, DF.n_ports)[p]
+    assert not plan.port_state_at(5, DF.n_ports)[p]
+    assert not plan.port_state_at(8, DF.n_ports)[p]
+    assert plan.port_state_at(9, DF.n_ports)[p]
+
+
+# ------------------------------------------------ Spritz §IV-C failover --
+F, P = 4, 16
+PATH_LAT = jnp.tile((jnp.arange(P, dtype=jnp.float32) * 100 + 100)[None],
+                    (F, 1))
+ACTIVE = jnp.ones(F, bool)
+
+
+def _fb(stt, cfg, ev, typ, t, rate=0.0):
+    return S.feedback_logic(stt, cfg, jnp.asarray(ev, jnp.int32),
+                            jnp.full(F, typ, jnp.int32),
+                            jnp.full(F, rate, jnp.float32), PATH_LAT,
+                            jnp.int32(t))
+
+
+def _state_with_blocked_front(variant, block_until=1000):
+    """Buffer front = path 5, path 5 blocked until ``block_until``."""
+    cfg = S.SpritzConfig(variant=variant, explore_threshold=100)
+    stt = S.init_state(jnp.tile(jnp.linspace(3.0, 1.0, P)[None], (F, 1)))
+    stt = _fb(stt, cfg, [5] * F, S.ACK_OK, t=0)
+    stt = _fb(stt, cfg, [9] * F, S.ACK_OK, t=0)  # second buffered EV
+    stt = stt._replace(blocked_until=stt.blocked_until.at[:, 5].set(
+        jnp.int32(block_until)))
+    return stt, cfg
+
+
+def test_send_skips_blocked_front_scout():
+    stt, cfg = _state_with_blocked_front(S.SCOUT)
+    st2, ev, explored = S.send_logic(stt, cfg, jax.random.PRNGKey(0),
+                                     jnp.int32(50), ACTIVE)
+    assert (np.asarray(ev) != 5).all()          # dead EV never reused
+    assert explored.all()                       # fell back to sampling
+    # Scout keeps the buffer; once the block expires the front is live again
+    _, ev3, expl3 = S.send_logic(st2, cfg, jax.random.PRNGKey(1),
+                                 jnp.int32(2000), ACTIVE)
+    assert (np.asarray(ev3) == 5).all() and not expl3.any()
+
+
+def test_spray_circular_consumption_skips_blocked_evs():
+    stt, cfg = _state_with_blocked_front(S.SPRAY)
+    # Spray discards the blocked front and samples this packet...
+    st2, ev, explored = S.send_logic(stt, cfg, jax.random.PRNGKey(0),
+                                     jnp.int32(50), ACTIVE)
+    assert (np.asarray(ev) != 5).all() and explored.all()
+    assert (st2.buffer[:, 0] == 9).all()        # walked past the dead EV
+    # ...and the next send consumes the live EV behind it
+    st3, ev2, expl2 = S.send_logic(st2, cfg, jax.random.PRNGKey(1),
+                                   jnp.int32(51), ACTIVE)
+    assert (np.asarray(ev2) == 9).all() and not expl2.any()
+    assert (st3.buffer[:, 0] == -1).all()
+
+
+def test_recovered_path_reenters_scout_buffer():
+    """§IV-C: timeout blocks + evicts the path; after the scheduled
+    recovery (block expired, insert cooldown passed) a clean ACK from a
+    re-probe re-caches it at the buffer front."""
+    cfg = S.SpritzConfig(variant=S.SCOUT, block_ticks=500,
+                         insert_cooldown=200, explore_threshold=100)
+    stt = S.init_state(jnp.tile(jnp.linspace(3.0, 1.0, P)[None], (F, 1)))
+    stt = _fb(stt, cfg, [5] * F, S.ACK_OK, t=0)
+    stt = _fb(stt, cfg, [5] * F, S.TIMEOUT, t=10)   # the link died
+    assert (stt.buffer[:, 0] == -1).all()           # evicted
+    assert (np.asarray(S.effective_weights(stt, jnp.int32(100)))[:, 5]
+            == 0).all()                             # and blocked
+    # block expires at 510 -> weighted sampling may probe path 5 again
+    w_eff = np.asarray(S.effective_weights(stt, jnp.int32(511)))
+    assert (w_eff[:, 5] > 0).all()
+    stt = _fb(stt, cfg, [5] * F, S.ACK_OK, t=600)   # probe ACKs clean
+    assert (stt.buffer[:, 0] == 5).all()            # re-cached
+
+
+def test_blocked_front_noop_when_unblocked():
+    """Regression guard: with no blocks the new skip logic must not
+    change Algorithm 1's behaviour."""
+    for variant in (S.SCOUT, S.SPRAY):
+        cfg = S.SpritzConfig(variant=variant, explore_threshold=100)
+        stt = S.init_state(jnp.tile(jnp.linspace(3.0, 1.0, P)[None],
+                                    (F, 1)))
+        stt = _fb(stt, cfg, [5] * F, S.ACK_OK, t=0)
+        _, ev, explored = S.send_logic(stt, cfg, jax.random.PRNGKey(2),
+                                      jnp.int32(10), ACTIVE)
+        assert (np.asarray(ev) == 5).all() and not explored.any()
+
+
+# ----------------------------------------------- engine-level semantics --
+def _conservation(res, state):
+    """inj_cnt == delivered + timeouts + NACKs-received + still-in-table,
+    with NACKs-received == trims - packets still awaiting their NACK."""
+    F_ = len(res.fct_ticks)
+    live = np.isin(state["pstate"],
+                   [P_QUEUED, P_PROP, P_ACKWAIT, P_NACKWAIT, P_LOST])
+    in_table = np.bincount(state["pflow"][live], minlength=F_)
+    nackwait = np.bincount(state["pflow"][state["pstate"] == P_NACKWAIT],
+                           minlength=F_)
+    lhs = state["inj_cnt"]
+    rhs = (res.delivered + res.timeouts + (res.trims - nackwait) + in_table)
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_midrun_delivery_port_failure_stalls_then_recovers():
+    """Fail a destination's delivery port mid-flight: every scheme loses
+    its only last hop — the flow must stall into timeouts, then complete
+    after the scheduled recovery (Scout re-probing the healed path)."""
+    dst = 40
+    flows = [B.Flow(0, dst, 64)]
+    port = DF.delivery_port(dst)
+    sched = (FailureSchedule(DF).set_ports(20, [port], up=False)
+             .set_ports(6000, [port], up=True))
+    spec = B.build_spec(DF, flows, SCOUT, n_ticks=1 << 15,
+                        failure_plan=sched, block_ticks=1024)
+    res, state = E.run(spec, return_carry=True)
+    assert res.done.all()
+    assert res.timeouts.sum() > 0 or res.trims.sum() > 0  # outage was felt
+    # completion strictly after the recovery tick
+    assert int(res.fct_ticks[0]) + int(spec.start_tick[0]) > 6000
+    assert res.down_violations == 0
+    _conservation(res, state)
+
+    # without the recovery the flow can never finish
+    sched2 = FailureSchedule(DF).set_ports(20, [port], up=False)
+    spec2 = B.build_spec(DF, flows, SCOUT, n_ticks=1 << 13,
+                         failure_plan=sched2, block_ticks=1024)
+    res2 = E.run(spec2)
+    assert not res2.done.any()
+    assert res2.timeouts.sum() > 0
+    assert res2.down_violations == 0
+
+
+def test_flapping_link_is_survivable():
+    flows = [B.Flow(e, 40 + e, 128) for e in range(4)]
+    sched = FailureSchedule(DF).flap(_links(DF, 2), period=256, at=64,
+                                     until=4096)
+    spec = B.build_spec(DF, flows, SPRAY_U, n_ticks=1 << 15,
+                        failure_plan=sched, block_ticks=512)
+    res, state = E.run(spec, return_carry=True)
+    assert res.done.all()
+    assert res.down_violations == 0
+    _conservation(res, state)
+
+
+# ------------------------------------------------------ property suite --
+@settings(max_examples=5, deadline=None)
+@given(st.data())
+def test_random_timelines_conserve_packets_and_never_cross_down_ports(data):
+    """Hypothesis: under arbitrary fail/recover timelines (1) no service
+    event ever crosses a port whose timeline says it is down, and (2)
+    every injected packet is accounted for: delivered, timed out,
+    NACKed back, or still in the table."""
+    scheme = data.draw(st.sampled_from([ECMP, OPS_U, SCOUT, SPRAY_U]),
+                       label="scheme")
+    n_links = data.draw(st.integers(1, 6), label="n_links")
+    seed = data.draw(st.integers(0, 2**16), label="link_seed")
+    links = _links(DF, n_links, seed=seed)
+    sched = FailureSchedule(DF)
+    t = 0
+    for _ in range(data.draw(st.integers(1, 4), label="n_waves")):
+        t += data.draw(st.integers(0, 800), label="gap")
+        k = data.draw(st.integers(1, n_links), label="wave_size")
+        sched.fail_links(t, links[:k])
+        if data.draw(st.booleans(), label="recovers"):
+            t += data.draw(st.integers(1, 800), label="outage")
+            sched.recover(t)
+    flows = [B.Flow(e, 40 + (e % 3), 96, start_tick=8 * e)
+             for e in range(5)]
+    spec = B.build_spec(DF, flows, scheme, n_ticks=1 << 13,
+                        failure_plan=sched, block_ticks=1024)
+    res, state = E.run(spec, return_carry=True)
+    assert res.down_violations == 0
+    _conservation(res, state)
+    # the final port mask matches the host-side oracle at the last tick
+    plan = FailurePlan(spec.fail_event_tick, spec.fail_event_port,
+                       spec.fail_event_up)
+    want_up = plan.port_state_at(res.ticks_simulated, DF.n_ports,
+                                 initial=~spec.port_failed)
+    np.testing.assert_array_equal(state["port_up"], want_up)

@@ -61,4 +61,5 @@ def run(scale: str, out_dir: Path, quick: bool = False):
 
 
 if __name__ == "__main__":
-    run("small", Path("results/bench"))
+    from benchmarks.common import bench_cli
+    bench_cli(run)

@@ -133,6 +133,5 @@ def _report_reaction(rows):
 
 if __name__ == "__main__":
     import sys
-    quick = "--quick" in sys.argv
-    run("full" if "--full" in sys.argv else "small", quick=quick,
-        strict=quick)
+    from benchmarks.common import bench_cli
+    bench_cli(run, strict="--quick" in sys.argv)

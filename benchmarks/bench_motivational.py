@@ -52,5 +52,5 @@ def run(scale: str = "small", out_dir: Path = Path("results/bench"),
 
 
 if __name__ == "__main__":
-    import sys
-    run("full" if "--full" in sys.argv else "small")
+    from benchmarks.common import bench_cli
+    bench_cli(run)

@@ -8,24 +8,66 @@ reports which scale produced each number).
 """
 from __future__ import annotations
 
+import argparse
 import csv
+import inspect
 import json
 import time
 from pathlib import Path
 
 import numpy as np
 
+from repro.net.policies import registry as REG
 from repro.net.sim import build as B
 from repro.net.sim import engine as E
-from repro.net.sim.types import (ECMP, FLICR_W, MINIMAL, OPS_U, OPS_W,
-                                 SCHEME_NAMES, SCOUT, SPRAY_U, SPRAY_W,
-                                 UGAL_L, VALIANT)
+from repro.net.sim.types import SCHEME_NAMES, SPRAY_W
 from repro.net.topology.dragonfly import make_dragonfly
 from repro.net.topology.slimfly import make_slimfly
 
-ALL_SCHEMES = [MINIMAL, VALIANT, UGAL_L, ECMP, FLICR_W, OPS_U, OPS_W,
-               SCOUT, SPRAY_U, SPRAY_W]
-ADAPTIVE_SCHEMES = [VALIANT, OPS_U, OPS_W, SCOUT, SPRAY_U, SPRAY_W]  # failures
+# scheme sets come from the sender-policy registry (DESIGN.md §11): every
+# registered scheme benchmarks by default; ``failover`` flags the schemes
+# able to adapt around failures (bench_failures' set — Minimal, ECMP,
+# UGAL-L and Flicr cannot finish within the paper's time limit there).
+ALL_SCHEMES = [p.code for p in REG.all_policies()]
+ADAPTIVE_SCHEMES = [p.code for p in REG.failover_policies()]
+
+
+def scheme_codes(arg) -> list[int]:
+    """Shared ``--schemes`` filter: a comma-separated string (or iterable)
+    of registry names — integer codes accepted as a deprecation shim."""
+    if arg is None:
+        return None
+    if isinstance(arg, str):
+        arg = [s for s in arg.split(",") if s]
+    return [REG.as_code(int(s) if isinstance(s, str) and s.isdigit() else s)
+            for s in arg]
+
+
+def bench_cli(run, argv=None, **fixed):
+    """Shared CLI for every ``bench_*`` module: ``--full/--scale``,
+    ``--quick``, ``--out`` and the registry-name ``--schemes`` filter
+    (e.g. ``--schemes spritz_scout,reps``).  Keyword arguments the
+    bench's ``run`` does not accept are dropped."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale topologies (slow)")
+    ap.add_argument("--scale", default=None,
+                    choices=["small", "mid", "full"])
+    ap.add_argument("--quick", action="store_true",
+                    help="single fast cell (CI smoke)")
+    ap.add_argument("--schemes", default=None,
+                    help="comma-separated registry scheme names "
+                         f"(known: {','.join(REG.names())})")
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args(argv)
+    scale = args.scale or ("full" if args.full else "small")
+    kw = dict(schemes=scheme_codes(args.schemes), quick=args.quick, **fixed)
+    accepted = inspect.signature(run).parameters
+    for flag in ("schemes", "quick"):
+        if kw.get(flag) and flag not in accepted:
+            ap.error(f"--{flag} is not supported by this benchmark")
+    kw = {k: v for k, v in kw.items() if k in accepted}
+    return run(scale, Path(args.out), **kw)
 
 
 def topologies(scale: str):

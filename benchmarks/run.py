@@ -57,25 +57,38 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: motivational,micro,collectives,"
                          "incast,trace,failures,memory,kernels,engine")
+    ap.add_argument("--schemes", default=None,
+                    help="comma-separated registry scheme names forwarded "
+                         "to every suite that takes a scheme set")
     ap.add_argument("--out", default="results/bench")
     args = ap.parse_args()
     out = Path(args.out)
     quick = args.scale == "quick"
     scale = "small" if quick else args.scale
 
+    import inspect
+
     from benchmarks import (bench_collectives, bench_engine, bench_fabric,
                             bench_failures, bench_incast, bench_memory,
                             bench_micro, bench_motivational, bench_trace)
+    from benchmarks.common import scheme_codes
+    schemes = scheme_codes(args.schemes)
+
+    def call(fn, **kw):
+        if schemes is not None and "schemes" in inspect.signature(fn).parameters:
+            kw["schemes"] = schemes
+        return fn(scale, out, **kw)
+
     suites = {
-        "memory": lambda: bench_memory.run(scale, out),
-        "engine": lambda: bench_engine.run(scale, out),
-        "motivational": lambda: bench_motivational.run(scale, out, quick=quick),
-        "micro": lambda: bench_micro.run(scale, out, quick=quick),
-        "collectives": lambda: bench_collectives.run(scale, out, quick=quick),
-        "incast": lambda: bench_incast.run(scale, out, quick=quick),
-        "trace": lambda: bench_trace.run(scale, out, quick=quick),
-        "failures": lambda: bench_failures.run(scale, out, quick=quick),
-        "fabric": lambda: bench_fabric.run(scale, out, quick=quick),
+        "memory": lambda: call(bench_memory.run),
+        "engine": lambda: call(bench_engine.run),
+        "motivational": lambda: call(bench_motivational.run, quick=quick),
+        "micro": lambda: call(bench_micro.run, quick=quick),
+        "collectives": lambda: call(bench_collectives.run, quick=quick),
+        "incast": lambda: call(bench_incast.run, quick=quick),
+        "trace": lambda: call(bench_trace.run, quick=quick),
+        "failures": lambda: call(bench_failures.run, quick=quick),
+        "fabric": lambda: call(bench_fabric.run, quick=quick),
     }
     only = set(args.only.split(",")) if args.only else None
 

@@ -12,7 +12,6 @@ import numpy as np
 # ---------------------------------------------------------------- 1. Spritz
 from repro.net.sim import build as B
 from repro.net.sim import engine as E
-from repro.net.sim.types import MINIMAL, SPRAY_W, SCHEME_NAMES
 from repro.net.topology.dragonfly import make_dragonfly
 from repro.net.workloads import adversarial
 
@@ -22,12 +21,14 @@ print(f"[1] Dragonfly a=4 h=2 p=2: {topo.n_endpoints} endpoints, "
 
 flows = adversarial(topo, size_pkts=256)
 # one batched program for the whole scheme sweep: compiles once, each
-# scheme a vmapped lane (DESIGN.md §5)
-schemes = [MINIMAL, SPRAY_W]
-base = B.build_spec(topo, flows, SPRAY_W, n_ticks=1 << 16)
+# scheme a vmapped lane (DESIGN.md §5).  Schemes go by registry name
+# (repro.net.policies, DESIGN.md §11); raw integer codes still work as a
+# deprecation shim.
+schemes = ["minimal", "spritz_spray_w"]
+base = B.build_spec(topo, flows, "spritz_spray_w", n_ticks=1 << 16)
 for scheme, res in zip(schemes, E.run_batch(base, schemes=schemes)):
     fct = B.ticks_to_us(res.fct_ticks[res.done])
-    print(f"    {SCHEME_NAMES[scheme]:14s} mean FCT {fct.mean():8.1f} us   "
+    print(f"    {scheme:14s} mean FCT {fct.mean():8.1f} us   "
           f"trims {res.trims.sum():5d}   "
           f"({res.steps_executed} steps for {res.ticks_simulated} ticks, "
           f"x{res.compression:.1f} event compression)")

@@ -15,7 +15,6 @@ import numpy as np
 from repro.net.sim import build as B
 from repro.net.sim import engine as E
 from repro.net.sim.failures import FailureSchedule
-from repro.net.sim.types import ECMP, OPS_U, SCHEME_NAMES, SCOUT, SPRAY_W
 from repro.net.topology.slimfly import make_slimfly
 from repro.net.workloads import permutation
 
@@ -38,14 +37,15 @@ print(f"t={T_FAIL}: failing {n_fail} links {failed[:4]}"
 
 sched = FailureSchedule(topo).fail_links(T_FAIL, failed).recover(T_RECOVER)
 flows = permutation(topo, size_pkts=256, seed=1)
-# every scheme is a lane of one batched device program (DESIGN.md §5);
-# the event-compressed driver jumps the RTO dead-time on failed links
-schemes = [ECMP, OPS_U, SPRAY_W, SCOUT]
-base = B.build_spec(topo, flows, SPRAY_W, n_ticks=1 << 17,
+# every scheme is a registry-named lane of one batched device program
+# (DESIGN.md §5/§11); integer codes remain a deprecation shim.  The
+# event-compressed driver jumps the RTO dead-time on failed links.
+schemes = ["ecmp", "ops_u", "spritz_spray_w", "spritz_scout"]
+base = B.build_spec(topo, flows, "spritz_spray_w", n_ticks=1 << 17,
                     failure_plan=sched, block_ticks=1 << 10)
 for scheme, res in zip(schemes, E.run_batch(base, schemes=schemes)):
     fct = B.ticks_to_us(res.fct_ticks[res.done])
-    print(f"{SCHEME_NAMES[scheme]:14s} done {res.done.mean()*100:5.1f}%  "
+    print(f"{scheme:14s} done {res.done.mean()*100:5.1f}%  "
           f"mean FCT {fct.mean() if len(fct) else float('nan'):8.1f} us  "
           f"timeouts {res.timeouts.sum():5d}  trims {res.trims.sum():5d}  "
           f"x{res.compression:.1f} compression")

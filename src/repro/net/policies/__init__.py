@@ -1,0 +1,11 @@
+"""Composable sender-policy layer (DESIGN.md §11).
+
+``base`` defines the protocol (per-flow state pytree + ``choose_path`` /
+``on_feedback``), ``registry`` maps scheme name <-> code <-> functions
+<-> host lane rules, and one module per family implements the schemes:
+``static`` (minimal/ecmp/valiant), ``ugal``, ``ops``, ``flicr``,
+``spritz`` (Algorithms 1-3) and ``reps`` (arXiv:2407.21625).
+"""
+from repro.net.policies import base, registry  # noqa: F401
+from repro.net.policies.base import (  # noqa: F401
+    FeedbackCtx, PolicyDef, PolicyTables, SendCtx)

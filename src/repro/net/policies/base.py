@@ -1,0 +1,115 @@
+"""Sender-policy protocol (DESIGN.md §11).
+
+A load-balancing scheme is a *policy*: a set of pure, flow-batched
+functions over a per-flow state pytree, registered in
+``repro.net.policies.registry``.  The engine never names a scheme — its
+tick dispatches ``choose_path`` / ``on_feedback`` through a single
+``lax.switch`` over the registry-ordered branches, so adding a scheme is
+a registry addition, not an engine edit.
+
+Protocol (all device-side functions are jit-traceable; ``state`` is the
+policy *family's* substate inside the stacked policy dict, or ``None``
+for stateless families):
+
+    init_state(weights, static_path) -> state            (host, once)
+    choose_path(state, cfg, tables, ctx) -> (path, explored, state)
+    on_feedback(state, cfg, tables, ctx) -> state
+
+``choose_path`` runs every executed tick for every flow and must only
+mutate state for ``ctx.active`` flows (and tick-pure bookkeeping like
+FLICR's move/reset, which is identity when no feedback accrued);
+``on_feedback`` must be the identity when ``ctx.fb_type == FB_NONE``.
+Both invariants are what keep the event-horizon jump bit-exact
+(DESIGN.md §4) — a policy that mutates state on an event-free tick
+desynchronizes the compressed driver from the dense reference and fails
+``tests/test_engine_equiv.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PolicyTables(NamedTuple):
+    """Static per-spec device arrays every policy may consult."""
+
+    path_ports: jax.Array      # [F, P, H] global port id per hop (-1 pad)
+    path_len: jax.Array        # [F, P] hops incl. delivery port
+    path_lat: jax.Array        # [F, P] f32 path latency (Scout's sort key)
+    valiant_w: jax.Array       # [F, P] per-hop-uniform Valiant weights
+    min_path: jax.Array        # [F] index of the minimal/static route
+
+
+class SendCtx(NamedTuple):
+    """Per-tick dynamic inputs to ``choose_path``."""
+
+    rng: jax.Array             # positional per-tick path key (fold_in(base, t))
+    t: jax.Array               # [] i32 current tick
+    active: jax.Array          # [F] bool — flows that emit a packet this tick
+    occ: jax.Array             # [n_ports] i32 analytic queue occupancy
+    weights: jax.Array         # [F, P] lane sampling weights for this scheme
+    static_path: jax.Array     # [F] lane ECMP/minimal static choice
+
+
+class FeedbackCtx(NamedTuple):
+    """Per-tick feedback inputs to ``on_feedback``: the representative
+    event per flow (priority TO > NACK > ECN > clean ACK, DESIGN.md §9)
+    plus the exact per-class counts of this tick."""
+
+    t: jax.Array               # [] i32
+    ev: jax.Array              # [F] path index the feedback refers to
+    fb_type: jax.Array         # [F] FB_* code (FB_NONE = no event this tick)
+    ecn_rate: jax.Array        # [F] f32 running ECN rate over sampled packets
+    n_mark: jax.Array          # [F] i32 ECN-marked ACKs this tick
+    n_nack: jax.Array          # [F] i32 NACKs (trims) this tick
+    n_to: jax.Array            # [F] i32 RTO timeouts this tick
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyDef:
+    """One registered scheme (see ``registry.register``).
+
+    ``family`` keys the scheme's substate inside the stacked policy dict
+    carried by the engine; schemes sharing state (Scout and both Sprays)
+    share a family.  ``uniform_weights`` / ``pin_minimal`` are the
+    host-side lane rules ``build_spec`` and ``lane_arrays`` read instead
+    of the old integer if-ladders; ``failover`` marks schemes able to
+    adapt around failures (the ``bench_failures`` scheme set).
+    """
+
+    name: str
+    code: int
+    family: str | None
+    make_cfg: Callable[[Any], Any]
+    choose_path: Callable[..., tuple]
+    on_feedback: Callable[..., Any] | None = None
+    init_state: Callable[[jnp.ndarray, jnp.ndarray], Any] | None = None
+    uniform_weights: bool = False
+    pin_minimal: bool = False
+    failover: bool = False
+    doc: str = ""
+
+
+def weighted_sample_rows(rng: jax.Array, w: jnp.ndarray) -> jnp.ndarray:
+    """Per-row weighted index sample from ONE shared uniform draw.
+
+    Every policy's sampler must route its randomness through this exact
+    draw (``uniform(rng, (F, 1))``): the batched driver evaluates all
+    registry branches under ``vmap`` and selects by lane scheme id, so a
+    lane is bit-identical to the specialized solo run only because each
+    branch consumes the tick key identically (DESIGN.md §5).
+    Rows with all-zero weights fall back to index 0.
+    """
+    csum = jnp.cumsum(w, axis=-1)
+    u = jax.random.uniform(rng, (w.shape[0], 1)) * jnp.maximum(
+        csum[:, -1:], 1e-30)
+    return jnp.minimum(jnp.sum((csum < u).astype(jnp.int32), -1),
+                       w.shape[-1] - 1)
+
+
+def all_explored(ref: jnp.ndarray) -> jnp.ndarray:
+    """Default ``explored`` flags: every packet counts as sampled."""
+    return jnp.ones(ref.shape[0], bool)

@@ -1,0 +1,65 @@
+"""FLICR (sender-side approximation): ECN-count-triggered weighted path
+moves (DESIGN.md §9).  The flow stays on its current path until enough
+negative feedback accrues (`marks >= move_marks`; NACKs and timeouts
+count 8x), then re-samples a weighted fresh path and resets the counter.
+
+State is per-flow: the current path and the accrued mark counter.  The
+move/reset happens on the executed tick the threshold is crossed (marks
+only change on feedback events, so event-free ticks are identity —
+the DESIGN.md §4 requirement).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.net.policies import base as PB
+
+FAMILY = "flicr"
+
+
+class FlicrConfig(NamedTuple):
+    move_marks: int = 8      # marks on the current path before moving
+
+
+class FlicrState(NamedTuple):
+    cur: jnp.ndarray         # [F] i32 current path index
+    marks: jnp.ndarray       # [F] i32 accrued negative feedback
+
+
+def _make_cfg(spec) -> FlicrConfig:
+    return FlicrConfig(move_marks=spec.flicr_ecn_move)
+
+
+def _init_state(weights: jnp.ndarray, static_path: jnp.ndarray) -> FlicrState:
+    del weights
+    return FlicrState(cur=jnp.asarray(static_path, jnp.int32),
+                      marks=jnp.zeros(static_path.shape[0], jnp.int32))
+
+
+def _choose_path(state: FlicrState, cfg: FlicrConfig,
+                 tables: PB.PolicyTables, ctx: PB.SendCtx):
+    del tables
+    fresh = PB.weighted_sample_rows(ctx.rng, ctx.weights)
+    move = state.marks >= cfg.move_marks
+    cur = jnp.where(move, fresh, state.cur)
+    new_state = FlicrState(cur=cur, marks=jnp.where(move, 0, state.marks))
+    return cur, PB.all_explored(cur), new_state
+
+
+def _on_feedback(state: FlicrState, cfg: FlicrConfig,
+                 tables: PB.PolicyTables, ctx: PB.FeedbackCtx) -> FlicrState:
+    del cfg, tables
+    return state._replace(
+        marks=state.marks + ctx.n_mark + 8 * (ctx.n_nack + ctx.n_to))
+
+
+def make_policies(codes) -> tuple[PB.PolicyDef, ...]:
+    """codes: (FLICR_W,)"""
+    (flicr_w,) = codes
+    return (PB.PolicyDef(
+        name="flicr_w", code=flicr_w, family=FAMILY, make_cfg=_make_cfg,
+        choose_path=_choose_path, on_feedback=_on_feedback,
+        init_state=_init_state,
+        doc="FLICR: ECN-triggered weighted path moves (flowlet approx.)"),)

@@ -1,0 +1,204 @@
+"""Sender-policy registry (DESIGN.md §11).
+
+Single source of truth mapping scheme name <-> code <-> device-side
+policy functions <-> host-side lane rules.  The engine builds its
+``lax.switch`` branch list from :func:`all_policies` (registry order ==
+scheme-code order == branch index), ``build_spec`` / ``lane_arrays`` /
+``run_batch`` read the ``uniform_weights`` / ``pin_minimal`` lane rules,
+and the benchmark harness derives its scheme sets (``failover`` flag)
+and the ``--schemes`` name filter from here.
+
+Adding a scheme = write a policy module exposing ``make_policies`` and
+list it in ``_MODULES`` — zero engine edits (``reps`` is the worked
+example; see DESIGN.md §11 for the checklist).
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.net.policies import base as PB
+from repro.net.policies import flicr as _flicr
+from repro.net.policies import ops as _ops
+from repro.net.policies import reps as _reps
+from repro.net.policies import spritz as _spritz
+from repro.net.policies import static as _static
+from repro.net.policies import ugal as _ugal
+from repro.net.sim import types as T
+
+# module -> the scheme codes it registers (codes live in sim.types so the
+# integer ABI of specs/benchmark CSVs predates and outlives this layer)
+_MODULES = (
+    (_static, (T.MINIMAL, T.ECMP, T.VALIANT)),
+    (_ugal, (T.UGAL_L,)),
+    (_flicr, (T.FLICR_W,)),
+    (_ops, (T.OPS_U, T.OPS_W)),
+    (_spritz, (T.SCOUT, T.SPRAY_U, T.SPRAY_W)),
+    (_reps, (T.REPS,)),
+)
+
+
+def _build() -> tuple[PB.PolicyDef, ...]:
+    defs: list[PB.PolicyDef] = []
+    for mod, codes in _MODULES:
+        defs.extend(mod.make_policies(codes))
+    defs.sort(key=lambda p: p.code)
+    codes = [p.code for p in defs]
+    if codes != list(range(len(defs))):
+        raise RuntimeError(f"policy codes must be contiguous 0..n-1: {codes}")
+    names = [p.name for p in defs]
+    if len(set(names)) != len(names):
+        raise RuntimeError(f"duplicate policy names: {names}")
+    for p in defs:
+        want = T.SCHEME_NAMES.get(p.code)
+        if want is not None and want != p.name:
+            raise RuntimeError(
+                f"policy {p.name} (code {p.code}) disagrees with "
+                f"types.SCHEME_NAMES ({want})")
+    return tuple(defs)
+
+
+_POLICIES: tuple[PB.PolicyDef, ...] = _build()
+_BY_NAME = {p.name: p for p in _POLICIES}
+
+
+# ------------------------------------------------------------------ lookup
+def all_policies() -> tuple[PB.PolicyDef, ...]:
+    """Every registered policy, ordered by scheme code (== switch branch
+    index)."""
+    return _POLICIES
+
+
+def by_code(code: int) -> PB.PolicyDef:
+    if not 0 <= code < len(_POLICIES):
+        raise ValueError(f"unknown scheme code {code}")
+    return _POLICIES[code]
+
+
+def by_name(name: str) -> PB.PolicyDef:
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}; known: {sorted(_BY_NAME)}") from None
+
+
+def resolve(scheme) -> PB.PolicyDef:
+    """Name or PolicyDef -> PolicyDef; integer codes remain accepted as a
+    deprecation shim for pre-registry callers."""
+    if isinstance(scheme, PB.PolicyDef):
+        return scheme
+    if isinstance(scheme, str):
+        return by_name(scheme)
+    return by_code(int(scheme))
+
+
+def as_code(scheme) -> int:
+    return resolve(scheme).code
+
+
+def as_codes(schemes: Iterable) -> list[int]:
+    return [as_code(s) for s in schemes]
+
+
+def names() -> list[str]:
+    return [p.name for p in _POLICIES]
+
+
+def failover_policies() -> tuple[PB.PolicyDef, ...]:
+    return tuple(p for p in _POLICIES if p.failover)
+
+
+# --------------------------------------------------- device-side assembly
+def make_cfgs(spec) -> dict:
+    """Per-policy config pytrees from one SimSpec (trace-time constants)."""
+    return {p.name: p.make_cfg(spec) for p in _POLICIES}
+
+
+def init_state(weights: np.ndarray, static_path: np.ndarray) -> dict:
+    """The stacked policy state: one substate per family, present for
+    every lane regardless of scheme (batched lanes differ only in scheme
+    id, so the carry structure must not)."""
+    w = jnp.asarray(weights, jnp.float32)
+    sp = jnp.asarray(static_path, jnp.int32)
+    out: dict = {}
+    for p in _POLICIES:
+        if p.family and p.family not in out:
+            out[p.family] = p.init_state(w, sp)
+    return out
+
+
+def _send_branch(p: PB.PolicyDef, cfgs: dict, tables: PB.PolicyTables):
+    cfg = cfgs[p.name]
+
+    def branch(pol_state: dict, ctx: PB.SendCtx):
+        sub = pol_state[p.family] if p.family else None
+        path, explored, sub2 = p.choose_path(sub, cfg, tables, ctx)
+        if p.family:
+            pol_state = {**pol_state, p.family: sub2}
+        return path.astype(jnp.int32), explored, pol_state
+
+    return branch
+
+
+def _feedback_branch(p: PB.PolicyDef, cfgs: dict, tables: PB.PolicyTables):
+    cfg = cfgs[p.name]
+
+    def branch(pol_state: dict, ctx: PB.FeedbackCtx):
+        if p.family and p.on_feedback is not None:
+            sub2 = p.on_feedback(pol_state[p.family], cfg, tables, ctx)
+            return {**pol_state, p.family: sub2}
+        return pol_state
+
+    return branch
+
+
+def send_branches(cfgs: dict, tables: PB.PolicyTables) -> list:
+    """Registry-ordered ``choose_path`` branches for ``lax.switch``: every
+    branch maps ``(policy_state, SendCtx) -> (path, explored, state)``
+    with an identical output pytree structure."""
+    return [_send_branch(p, cfgs, tables) for p in _POLICIES]
+
+
+def feedback_branches(cfgs: dict, tables: PB.PolicyTables) -> list:
+    """Registry-ordered ``on_feedback`` branches:
+    ``(policy_state, FeedbackCtx) -> policy_state``."""
+    return [_feedback_branch(p, cfgs, tables) for p in _POLICIES]
+
+
+# ------------------------------------------------------- host lane rules
+def lane_weights(spec, scheme) -> np.ndarray:
+    """A scheme lane's sampling weights derived from a base spec,
+    mirroring ``build_spec``'s per-scheme rules (DESIGN.md §5)."""
+    p = resolve(scheme)
+    if p.uniform_weights:
+        F, P = spec.weights.shape
+        w = np.zeros((F, P), np.float32)
+        for fi in range(F):
+            w[fi, :int(spec.n_paths[fi])] = 1.0
+        return w
+    if resolve(spec.scheme).uniform_weights:
+        raise ValueError(
+            "cannot derive weighted-scheme lanes from a uniform-weight "
+            "base spec; build the base spec with e.g. SPRAY_W")
+    return np.asarray(spec.weights, np.float32)
+
+
+def lane_static_path(spec, scheme) -> np.ndarray:
+    """A scheme lane's static path choice derived from a base spec."""
+    p = resolve(scheme)
+    if p.pin_minimal:
+        return np.asarray(
+            np.where(spec.bg_mask, spec.static_path, spec.min_path),
+            np.int32)
+    if resolve(spec.scheme).pin_minimal:
+        raise ValueError(
+            "cannot derive ECMP-style lanes from a MINIMAL base spec; "
+            "build the base spec with e.g. SPRAY_W")
+    return np.asarray(spec.static_path, np.int32)
+
+
+def lane_arrays(spec, scheme) -> tuple[np.ndarray, np.ndarray]:
+    return lane_weights(spec, scheme), lane_static_path(spec, scheme)

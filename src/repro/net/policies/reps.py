@@ -1,0 +1,96 @@
+"""REPS — REcycling Entropies for Packet Spraying (Bonato et al.,
+arXiv:2407.21625) as the 11th registered scheme.
+
+Sender-side rule: every data packet carries an entropy value (EV == a
+path index in this model).  A clean ACK proves its EV traversed an
+uncongested, live path, so the sender *recycles* it: the EV is pushed
+into a fixed-size per-flow FIFO cache and the next packets pop from the
+cache front instead of drawing fresh entropy.  Negative or congested
+feedback breaks the recycling loop:
+
+* ECN-marked ACK — the EV is simply *not* recycled (the next packet
+  that would have reused it draws fresh uniform entropy instead);
+* NACK / RTO timeout (failure feedback) — every cached copy of the EV
+  is invalidated (removed, cache compacted), because the path may be
+  dead, not merely congested.
+
+Deviations mirroring the established engine model (DESIGN.md §9): the
+sender processes one representative feedback event per flow per tick
+(priority TO > NACK > ECN > clean ACK), so at most one EV is recycled or
+invalidated per flow per tick; the cache holds ``REPS_SLOTS`` EVs like
+Spritz's ``buffer_paths``.  Fresh entropy is a uniform draw over the
+flow's live paths (``uniform_weights`` lane rule — REPS has no Eq.-1
+weighting).
+
+This module is a pure registry addition: the engine dispatches it
+through the same ``lax.switch`` as every other scheme (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.net.policies import base as PB
+from repro.net.policies.spritz import (ACK_OK, NACK, TIMEOUT,
+                                       _buffer_push_back, _buffer_remove)
+
+FAMILY = "reps"
+REPS_SLOTS = 8           # cached EVs per flow (== Spritz buffer_paths size)
+
+
+class RepsConfig(NamedTuple):
+    pass                 # REPS has no tunables beyond the cache size
+
+
+class RepsState(NamedTuple):
+    cache: jnp.ndarray   # [F, B] i32 recycled EVs, -1 = empty (FIFO)
+
+
+def _make_cfg(spec) -> RepsConfig:
+    del spec
+    return RepsConfig()
+
+
+def _init_state(weights: jnp.ndarray, static_path: jnp.ndarray) -> RepsState:
+    del static_path
+    F = weights.shape[0]
+    return RepsState(cache=jnp.full((F, REPS_SLOTS), -1, jnp.int32))
+
+
+def _choose_path(state: RepsState, cfg: RepsConfig,
+                 tables: PB.PolicyTables, ctx: PB.SendCtx):
+    del cfg, tables
+    fresh = PB.weighted_sample_rows(ctx.rng, ctx.weights)
+    front = state.cache[:, 0]
+    have = front >= 0
+    path = jnp.where(have, front, fresh)
+    popped = jnp.concatenate(
+        [state.cache[:, 1:],
+         jnp.full((state.cache.shape[0], 1), -1, jnp.int32)], axis=1)
+    pop = have & ctx.active
+    cache = jnp.where(pop[:, None], popped, state.cache)
+    # recycled packets are not "sampled" for the network ECN estimate
+    return path, ~have, RepsState(cache=cache)
+
+
+def _on_feedback(state: RepsState, cfg: RepsConfig,
+                 tables: PB.PolicyTables, ctx: PB.FeedbackCtx) -> RepsState:
+    del cfg, tables
+    evc = ctx.ev  # engine guarantees a valid path index (0 when FB_NONE)
+    recycle = ctx.fb_type == ACK_OK
+    invalidate = (ctx.fb_type == NACK) | (ctx.fb_type == TIMEOUT)
+    cache = _buffer_push_back(state.cache, evc, recycle)
+    cache = _buffer_remove(cache, evc, invalidate)
+    return RepsState(cache=cache)
+
+
+def make_policies(codes) -> tuple[PB.PolicyDef, ...]:
+    """codes: (REPS,)"""
+    (reps,) = codes
+    return (PB.PolicyDef(
+        name="reps", code=reps, family=FAMILY, make_cfg=_make_cfg,
+        choose_path=_choose_path, on_feedback=_on_feedback,
+        init_state=_init_state,
+        uniform_weights=True, failover=True,
+        doc="REPS: recycle clean-ACK entropies, fresh on ECN/NACK/RTO"),)

@@ -1,0 +1,46 @@
+"""Static / oblivious sender policies: MINIMAL, ECMP, VALIANT.
+
+MINIMAL and ECMP share one stateless ``choose_path`` (the lane's static
+path); they differ only in the host-side lane rule — MINIMAL pins
+foreground flows to the minimal route (``pin_minimal``), ECMP keeps the
+per-flow hash draw.  VALIANT samples a random intermediate each packet
+via the per-hop-uniform Valiant weights.
+"""
+from __future__ import annotations
+
+from repro.net.policies import base as PB
+
+
+def _no_cfg(spec):
+    del spec
+    return None
+
+
+def _choose_static(state, cfg, tables: PB.PolicyTables, ctx: PB.SendCtx):
+    del state, cfg, tables
+    return ctx.static_path, PB.all_explored(ctx.static_path), None
+
+
+def _choose_valiant(state, cfg, tables: PB.PolicyTables, ctx: PB.SendCtx):
+    del state, cfg
+    path = PB.weighted_sample_rows(ctx.rng, tables.valiant_w)
+    return path, PB.all_explored(path), None
+
+
+def make_policies(codes) -> tuple[PB.PolicyDef, ...]:
+    """codes: (MINIMAL, ECMP, VALIANT) integer scheme ids."""
+    minimal, ecmp, valiant = codes
+    return (
+        PB.PolicyDef(
+            name="minimal", code=minimal, family=None, make_cfg=_no_cfg,
+            choose_path=_choose_static, pin_minimal=True,
+            doc="shortest-path routing pinned to the minimal route"),
+        PB.PolicyDef(
+            name="ecmp", code=ecmp, family=None, make_cfg=_no_cfg,
+            choose_path=_choose_static,
+            doc="per-flow static hash onto one equal-cost path"),
+        PB.PolicyDef(
+            name="valiant", code=valiant, family=None, make_cfg=_no_cfg,
+            choose_path=_choose_valiant, failover=True,
+            doc="per-packet random intermediate (Valiant) routing"),
+    )

@@ -1,0 +1,43 @@
+"""UGAL-L: per-packet choice between the minimal route and a Valiant
+candidate by comparing (local queue occupancy x hop count) at the first
+hop — the switch-local UGAL approximation the paper benchmarks against.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.net.policies import base as PB
+
+
+def _no_cfg(spec):
+    del spec
+    return None
+
+
+def _choose_path(state, cfg, tables: PB.PolicyTables, ctx: PB.SendCtx):
+    del state, cfg
+    cand = PB.weighted_sample_rows(ctx.rng, tables.valiant_w)
+    F = tables.min_path.shape[0]
+    fidx = jnp.arange(F)
+    first_min = tables.path_ports[fidx, tables.min_path, 0]
+    first_val = tables.path_ports[fidx, cand, 0]
+    q_min = ctx.occ[first_min].astype(jnp.float32)
+    q_val = ctx.occ[first_val].astype(jnp.float32)
+
+    def gather_fp(arr2d, path_idx):
+        return jnp.take_along_axis(arr2d, path_idx[:, None], axis=1)[:, 0]
+
+    h_min = gather_fp(tables.path_len, tables.min_path).astype(jnp.float32)
+    h_val = gather_fp(tables.path_len, cand).astype(jnp.float32)
+    pick_min = q_min * h_min <= q_val * h_val
+    path = jnp.where(pick_min, tables.min_path, cand)
+    return path, PB.all_explored(path), None
+
+
+def make_policies(codes) -> tuple[PB.PolicyDef, ...]:
+    """codes: (UGAL_L,)"""
+    (ugal_l,) = codes
+    return (PB.PolicyDef(
+        name="ugal_l", code=ugal_l, family=None, make_cfg=_no_cfg,
+        choose_path=_choose_path,
+        doc="UGAL-L: minimal vs Valiant by local queue x hops"),)

@@ -11,8 +11,8 @@ import dataclasses
 import numpy as np
 
 from repro.net import paths as P
-from repro.net.sim.types import (ECMP, MINIMAL, OPS_U, SCOUT, SPRAY_U,
-                                 SPRAY_W, FailurePlan, SimSpec)
+from repro.net.policies import registry as REG
+from repro.net.sim.types import FailurePlan, SimSpec
 from repro.net.topology.base import TICK_NS, Topology
 
 H_MAX = 7  # max switch hops (6) + delivery port
@@ -34,7 +34,7 @@ class Flow:
 def build_spec(
     topo: Topology,
     flows: list[Flow],
-    scheme: int,
+    scheme: int | str,
     *,
     name: str = "",
     w_scale: float = 3.0,
@@ -48,6 +48,11 @@ def build_spec(
     ecn_threshold: int | None = None,
     block_ticks: int | None = None,
 ) -> SimSpec:
+    # scheme may be a registry name or an integer code (deprecation shim);
+    # per-scheme weight/static-path rules come from the policy registry
+    # (DESIGN.md §11), not from integer if-ladders.
+    policy = REG.resolve(scheme)
+    scheme = policy.code
     rng = np.random.default_rng(seed)
     F = len(flows)
     bdp = topo.bdp_packets()
@@ -85,7 +90,7 @@ def build_spec(
     for fi, (fl, tb) in enumerate(zip(flows, tabs)):
         ssw = topo.ep_switch(fl.src_ep)
         n_paths[fi] = tb.n_paths
-        if scheme in (SPRAY_U, OPS_U):
+        if policy.uniform_weights:
             weights[fi, : tb.n_paths] = 1.0
         else:
             weights[fi, : tb.n_paths] = tb.weights(w_scale)
@@ -119,7 +124,7 @@ def build_spec(
         min_path[fi] = mp
         # ECMP-style static assignment (5-tuple hash ~ per-hop-uniform draw);
         # foreground MINIMAL flows pin the default minimal route instead.
-        if fl.pin_minimal or (scheme == MINIMAL and not fl.bg):
+        if fl.pin_minimal or (policy.pin_minimal and not fl.bg):
             static_path[fi] = mp
         else:
             static_path[fi] = int(
@@ -190,20 +195,22 @@ def build_spec(
     )
 
 
-def respec_scheme(spec: SimSpec, scheme: int) -> SimSpec:
+def respec_scheme(spec: SimSpec, scheme: int | str) -> SimSpec:
     """Clone a built spec for a different scheme WITHOUT rebuilding the
     (host-expensive) EV path tables.
 
-    Mirrors ``build_spec``'s per-scheme rules via ``engine.lane_arrays``
-    (DESIGN.md §5): SPRAY_U/OPS_U get uniform weights over live paths,
-    MINIMAL pins foreground flows to the minimal route, everything else
-    inherits the base spec's weights/static draw.  The base spec must be
-    built with a weighted scheme (e.g. SPRAY_W).
+    Mirrors ``build_spec``'s per-scheme rules via the registry's host
+    lane rules (DESIGN.md §5/§11): ``uniform_weights`` schemes get
+    uniform weights over live paths, ``pin_minimal`` schemes pin
+    foreground flows to the minimal route, everything else inherits the
+    base spec's weights/static draw.  The base spec must be built with a
+    weighted scheme (e.g. SPRAY_W).  ``scheme`` may be a registry name
+    or an integer code.
     """
-    from repro.net.sim import engine as E
+    scheme = REG.as_code(scheme)
     if scheme == spec.scheme:
         return spec
-    w, sp = E.lane_arrays(spec, scheme)
+    w, sp = REG.lane_arrays(spec, scheme)
     return dataclasses.replace(spec, scheme=scheme, weights=w,
                                static_path=sp, name=f"{spec.name}:s{scheme}")
 

@@ -10,7 +10,7 @@ preserved *analytically* with a service-slot counter per port:
     tail[port] += #accepted            occupancy(port) = max(tail - t, 0)
 
 so there are no queue data structures at all — enqueue, RED/ECN marking,
-trimming, service, propagation, CC and the Spritz control loop are dense
+trimming, service, propagation, CC and the sender policy loop are dense
 array ops over the packet table.
 
 Time advances by *event horizon* rather than tick-by-tick (DESIGN.md §4):
@@ -21,9 +21,14 @@ Per-tick PRNG keys are derived positionally (``fold_in(base, t)``), which
 makes the jump bit-exact against the dense reference stepper: executing
 the skipped ticks would have been the identity.
 
+Load-balancing schemes are *not* wired into the tick (DESIGN.md §11):
+path choice and feedback handling dispatch through one ``lax.switch``
+over the branches of ``repro.net.policies.registry`` — the engine carries
+a stacked per-family policy state dict and never names a scheme.
+
 The run loop is a device-side ``lax.while_loop`` with a donated carry (no
-per-chunk host round-trip), and ``run_batch`` vmaps the whole driver over
-(scheme, seed) lanes so a sweep compiles once (DESIGN.md §5).
+per-chunk host sync, exact early stop), and ``run_batch`` vmaps the whole
+driver over (scheme, seed) lanes so a sweep compiles once (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -37,12 +42,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import spritz as SZ
-from repro.net.sim.types import (ECMP, FB_ACK_ECN, FB_ACK_OK, FB_NACK,
-                                 FB_NONE, FB_TIMEOUT, FLICR_W, MINIMAL, OPS_U,
-                                 OPS_W, P_ACKWAIT, P_FREE, P_LOST, P_NACKWAIT,
-                                 P_PROP, P_QUEUED, SCOUT, SPRAY_U, SPRAY_W,
-                                 SPRITZ_SCHEMES, UGAL_L, VALIANT, SimResult,
+from repro.net.policies import base as PB
+from repro.net.policies import registry as REG
+from repro.net.sim.types import (FB_ACK_ECN, FB_ACK_OK, FB_NACK, FB_NONE,
+                                 FB_TIMEOUT, P_ACKWAIT, P_FREE, P_LOST,
+                                 P_NACKWAIT, P_PROP, P_QUEUED, SimResult,
                                  SimSpec)
 
 INF_TICK = jnp.int32(1 << 30)
@@ -85,9 +89,8 @@ class Carry(NamedTuple):
     round_marks: jax.Array
     round_nacks: jax.Array
     round_size: jax.Array
-    flicr_cur: jax.Array
-    flicr_marks: jax.Array
-    spritz: SZ.SpritzState
+    # stacked sender-policy state: {family: substate} (DESIGN.md §11)
+    policy: dict
     # stats
     fct: jax.Array
     delivered: jax.Array
@@ -103,12 +106,6 @@ class Lane(NamedTuple):
     scheme: jax.Array          # [] i32
     weights: jax.Array         # [F, P] f32 sampling weights for this scheme
     static_path: jax.Array     # [F] i32
-
-
-def _weighted_sample_rows(rng, w):
-    csum = jnp.cumsum(w, axis=-1)
-    u = jax.random.uniform(rng, (w.shape[0], 1)) * jnp.maximum(csum[:, -1:], 1e-30)
-    return jnp.minimum(jnp.sum((csum < u).astype(jnp.int32), -1), w.shape[-1] - 1)
 
 
 def _tick_keys(rng: jax.Array, t: jax.Array):
@@ -128,9 +125,11 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
     """Returns the jit-able transition ``tick(carry, t, lane) -> carry``.
 
     With ``batched=False`` the scheme is specialized at trace time from
-    ``spec.scheme`` and ``lane`` may be ``None``; with ``batched=True`` the
-    scheme id, sampling weights and static path come from ``lane`` so one
-    compiled program serves every (scheme, seed) lane of ``run_batch``.
+    ``spec.scheme`` (only that registry branch is traced) and ``lane`` may
+    be ``None``; with ``batched=True`` the scheme id, sampling weights and
+    static path come from ``lane`` and the policy dispatch is a
+    ``lax.switch`` over every registry branch, so one compiled program
+    serves every (scheme, seed) lane of ``run_batch``.
     """
     F = spec.n_flows
     N = spec.n_pkt
@@ -170,122 +169,66 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
     use_onehot_rank = M * NP_ <= _ONEHOT_CELLS
     use_gemm_sums = N * F <= _ONEHOT_CELLS
 
-    scheme_s = spec.scheme
-    base_cfg = dict(
-        explore_threshold=spec.explore_threshold,
-        ecn_threshold=spec.ecn_threshold,
-        min_bias_factor=spec.min_bias_factor,
-        block_ticks=spec.block_ticks,
-        always_sample=False,
-    )
-    scout_cfg = SZ.SpritzConfig(variant=SZ.SCOUT, **base_cfg)
-    spray_cfg = SZ.SpritzConfig(variant=SZ.SPRAY, **base_cfg)
+    # sender-policy layer (DESIGN.md §11): registry-ordered branches over
+    # a stacked per-family state dict.  The engine holds no scheme logic.
+    tables = PB.PolicyTables(path_ports=path_ports, path_len=path_len,
+                             path_lat=path_lat, valiant_w=valiant_w,
+                             min_path=min_path)
+    cfgs = REG.make_cfgs(spec)
+    send_brs = REG.send_branches(cfgs, tables)
+    fb_brs = REG.feedback_branches(cfgs, tables)
+    n_pol = len(send_brs)
+    scheme_code = int(spec.scheme)
+    if not batched and not 0 <= scheme_code < n_pol:
+        raise ValueError(f"unknown scheme {scheme_code}")
 
-    def gather_fp(arr2d, path_idx):
-        return jnp.take_along_axis(arr2d, path_idx[:, None], axis=1)[:, 0]
+    # ------------------------------------------------------- tick phases --
+    def apply_failure_events(c: Carry, t):
+        """A0 (DESIGN.md §10): apply every timeline event with tick <= t
+        past the cursor (the horizon stops at each event tick, so in the
+        compressed driver that set is exactly this tick's events; the
+        dense stepper sees the same sets tick by tick).  Last event per
+        port wins — a scatter-max over event index."""
+        if not E_EV:
+            return (c.port_up, c.fail_idx, c.q_tail, c.pstate, c.pevent,
+                    c.trims)
+        eidx = jnp.arange(E_EV, dtype=jnp.int32)
+        due = (eidx >= c.fail_idx) & (fev_tick <= t)
+        last = jnp.full(NP_ + 1, -1, jnp.int32).at[
+            jnp.where(due, fev_port, NP_)].max(
+            jnp.where(due, eidx, -1))[:NP_]
+        new_up = jnp.where(last >= 0, fev_up[jnp.maximum(last, 0)],
+                           c.port_up)
+        went_down = c.port_up & ~new_up
+        fail_idx = c.fail_idx + jnp.sum(due.astype(jnp.int32))
+        # in-flight semantics on a down transition: packets still queued
+        # at the dying port are trimmed back (header NACK — the switch
+        # drains its dead egress queue), packets already on the wire are
+        # black-holed (P_LOST -> sender RTO); the analytic queue empties.
+        cur0 = path_ports[c.pflow, c.ppath, c.phop]
+        hit = went_down[jnp.clip(cur0, 0, NP_ - 1)]
+        killq = (c.pstate == P_QUEUED) & hit
+        killp = (c.pstate == P_PROP) & hit
+        nack_at0 = t + rem_ticks[c.pflow, c.ppath,
+                                 jnp.minimum(c.phop,
+                                             rem_ticks.shape[2] - 1)]
+        pstate0 = jnp.where(killq, P_NACKWAIT,
+                            jnp.where(killp, P_LOST, c.pstate))
+        pevent0 = jnp.where(killq, nack_at0, c.pevent)
+        trims0 = c.trims + jnp.zeros(F + 1, jnp.int32).at[
+            jnp.where(killq, c.pflow, F)].add(1)[:F]
+        q_tail0 = jnp.where(went_down, jnp.minimum(c.q_tail, t),
+                            c.q_tail)
+        return new_up, fail_idx, q_tail0, pstate0, pevent0, trims0
 
-    def _ugal_pick(cand, occ):
-        first_min = path_ports[jnp.arange(F), min_path, 0]
-        first_val = path_ports[jnp.arange(F), cand, 0]
-        q_min = occ[first_min].astype(jnp.float32)
-        q_val = occ[first_val].astype(jnp.float32)
-        h_min = gather_fp(path_len, min_path).astype(jnp.float32)
-        h_val = gather_fp(path_len, cand).astype(jnp.float32)
-        pick_min = q_min * h_min <= q_val * h_val
-        return jnp.where(pick_min, min_path, cand)
-
-    def _enqueue_rank(cport):
-        """FIFO rank among same-tick enqueues per port, in compacted space.
-
-        Small fabrics: segmented scatter-add rank — a prefix histogram of
-        one-hot port indicators (cumsum of scatter contributions) read back
-        at each packet's own port.  Large fabrics: stable argsort over the
-        M-compacted set (still ~N/M cheaper than the old table-wide sort).
-        Both produce the identical rank: position among this tick's
-        enqueues of the same port, ordered by packet-table index.
-        """
-        if use_onehot_rank:
-            oh = cport[:, None] == jnp.arange(NP_, dtype=jnp.int32)[None, :]
-            pos = jnp.cumsum(oh.astype(jnp.int32), axis=0) * oh
-            return jnp.maximum(pos.sum(-1) - 1, 0)
-        order = jnp.argsort(cport)
-        sorted_port = cport[order]
-        pos = jnp.arange(M, dtype=jnp.int32)
-        is_start = jnp.concatenate([jnp.ones(1, bool),
-                                    sorted_port[1:] != sorted_port[:-1]])
-        seg_start = jax.lax.associative_scan(jnp.maximum,
-                                             jnp.where(is_start, pos, 0))
-        rank_sorted = pos - seg_start
-        return jnp.zeros(M, jnp.int32).at[order].set(rank_sorted)
-
-    def tick(c: Carry, t, lane: Lane | None = None):
-        k_path, k_mark = _tick_keys(c.rng, t)
-        t = t.astype(jnp.int32)
-
-        # ------------- A0. failure timeline events (DESIGN.md §10) ----------
-        # Apply every event with tick <= t past the cursor (the horizon stops
-        # at each event tick, so in the compressed driver that set is exactly
-        # this tick's events; the dense stepper sees the same sets tick by
-        # tick).  Last event per port wins — a scatter-max over event index.
-        port_up, fail_idx = c.port_up, c.fail_idx
-        q_tail0, pstate0, pevent0, trims0 = c.q_tail, c.pstate, c.pevent, \
-            c.trims
-        if E_EV:
-            eidx = jnp.arange(E_EV, dtype=jnp.int32)
-            due = (eidx >= fail_idx) & (fev_tick <= t)
-            last = jnp.full(NP_ + 1, -1, jnp.int32).at[
-                jnp.where(due, fev_port, NP_)].max(
-                jnp.where(due, eidx, -1))[:NP_]
-            new_up = jnp.where(last >= 0, fev_up[jnp.maximum(last, 0)],
-                               port_up)
-            went_down = port_up & ~new_up
-            port_up = new_up
-            fail_idx = fail_idx + jnp.sum(due.astype(jnp.int32))
-            # in-flight semantics on a down transition: packets still queued
-            # at the dying port are trimmed back (header NACK — the switch
-            # drains its dead egress queue), packets already on the wire are
-            # black-holed (P_LOST -> sender RTO); the analytic queue empties.
-            cur0 = path_ports[c.pflow, c.ppath, c.phop]
-            hit = went_down[jnp.clip(cur0, 0, NP_ - 1)]
-            killq = (c.pstate == P_QUEUED) & hit
-            killp = (c.pstate == P_PROP) & hit
-            nack_at0 = t + rem_ticks[c.pflow, c.ppath,
-                                     jnp.minimum(c.phop,
-                                                 rem_ticks.shape[2] - 1)]
-            pstate0 = jnp.where(killq, P_NACKWAIT,
-                                jnp.where(killp, P_LOST, c.pstate))
-            pevent0 = jnp.where(killq, nack_at0, c.pevent)
-            trims0 = c.trims + jnp.zeros(F + 1, jnp.int32).at[
-                jnp.where(killq, c.pflow, F)].add(1)[:F]
-            q_tail0 = jnp.where(went_down, jnp.minimum(c.q_tail, t),
-                                c.q_tail)
-
-        occ = jnp.maximum(q_tail0 - t, 0)
-        if batched:
-            scheme = lane.scheme
-            weights = lane.weights
-            static_path = lane.static_path
-            is_spritz = ((scheme == SCOUT) | (scheme == SPRAY_U)
-                         | (scheme == SPRAY_W))
-        else:
-            scheme = scheme_s
-            weights = spec_weights
-            static_path = spec_static
-            is_spritz = scheme_s in SPRITZ_SCHEMES
-
-        # ---------------- A. feedback arrivals + timeouts -------------------
-        ack_m = (pstate0 == P_ACKWAIT) & (pevent0 == t)
-        nack_m = (pstate0 == P_NACKWAIT) & (pevent0 == t)
-        inflight_states = (pstate0 == P_QUEUED) | (pstate0 == P_PROP) | (pstate0 == P_LOST)
-        to_m = inflight_states & (t - c.psent > spec.rto_ticks)
-
-        # Per-flow sums as ONE one-hot GEMM instead of per-mask scatters
-        # (XLA CPU scatter walks updates serially; the [K,N]x[N,F] product
-        # vectorizes).  Counts are < 2^24, so f32 accumulation is exact.
-        # Beyond the one-hot cell budget (paper-scale F x N) fall back to
-        # segment scatter-adds — exact either way.
+    def flow_sums_fn(pflow):
+        """Per-flow sums as ONE one-hot GEMM instead of per-mask scatters
+        (XLA CPU scatter walks updates serially; the [K,N]x[N,F] product
+        vectorizes).  Counts are < 2^24, so f32 accumulation is exact.
+        Beyond the one-hot cell budget (paper-scale F x N) fall back to
+        segment scatter-adds — exact either way."""
         if use_gemm_sums:
-            flow_oh = (c.pflow[:, None]
+            flow_oh = (pflow[:, None]
                        == jnp.arange(F, dtype=jnp.int32)[None, :]
                        ).astype(jnp.float32)                 # [N, F]
 
@@ -295,25 +238,29 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         else:
             def flow_sums(rows):
                 return jnp.stack([
-                    jnp.zeros(F, jnp.int32).at[c.pflow].add(
+                    jnp.zeros(F, jnp.int32).at[pflow].add(
                         r.astype(jnp.int32)) for r in rows])
+        return flow_sums
+
+    def collect_feedback(c: Carry, pstate0, pevent0, t, flow_sums):
+        """A: feedback arrivals + timeouts -> per-flow counts and the
+        representative event per flow (priority TO > NACK > ECN > OK;
+        min packet index within the winning class) via ONE composite
+        scatter-min: key = (3 - class) * N + index, and the class codes
+        are ordered so that class == FB code."""
+        ack_m = (pstate0 == P_ACKWAIT) & (pevent0 == t)
+        nack_m = (pstate0 == P_NACKWAIT) & (pevent0 == t)
+        inflight_states = ((pstate0 == P_QUEUED) | (pstate0 == P_PROP)
+                           | (pstate0 == P_LOST))
+        to_m = inflight_states & (t - c.psent > spec.rto_ticks)
+
         ecn_ack = ack_m & c.pecn
         sums = flow_sums(jnp.stack([
             ack_m, ecn_ack, nack_m, to_m,
             (ack_m | nack_m) & c.pexp,
             (ecn_ack | nack_m) & c.pexp,
         ]))                                                  # [6, F]
-        n_ack, n_mark, n_nack, n_to, n_exp, n_exp_bad = sums
-        g2 = spec.dctcp_g
-        exp_alpha = jnp.where(
-            n_exp > 0,
-            (1 - g2) * c.exp_alpha + g2 * n_exp_bad / jnp.maximum(n_exp, 1),
-            c.exp_alpha)
 
-        # representative feedback event per flow (priority TO > NACK > ECN >
-        # OK; min packet index within the winning class) via ONE composite
-        # scatter-min: key = (3 - class) * N + index, and the class codes
-        # are ordered so that class == FB code.
         fb_m = ack_m | nack_m | to_m
         fb_cat = jnp.where(to_m, FB_TIMEOUT,
                            jnp.where(nack_m, FB_NACK,
@@ -329,13 +276,15 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         ppath_x = _padded(c.ppath, 0)  # idx N pad
         fb_type = jnp.where(has_fb, FB_TIMEOUT - kmin // N, FB_NONE)
         fb_ev = jnp.where(has_fb, ppath_x[jnp.minimum(rep_idx, N)], 0)
+        return ack_m, nack_m, to_m, sums, fb_ev, fb_type
 
-        # --- CC (DCTCP + SMaRTT-style QuickAdapt/FastIncrease) ---
-        # ECN marks drive the DCTCP alpha cut; QuickAdapt fires only on
-        # heavy *trimming* (real loss), resetting cwnd to the delivered
-        # bytes of the last window — SMaRTT semantics.  Conflating marks
-        # with trims nukes cwnd on any briefly-marked round, which
-        # penalizes path-pinned senders (Scout) far beyond the paper's CC.
+    def cc_round(c: Carry, n_ack, n_mark, n_nack, n_to):
+        """CC (DCTCP + SMaRTT-style QuickAdapt/FastIncrease).  ECN marks
+        drive the DCTCP alpha cut; QuickAdapt fires only on heavy
+        *trimming* (real loss), resetting cwnd to the delivered bytes of
+        the last window — SMaRTT semantics.  Conflating marks with trims
+        nukes cwnd on any briefly-marked round, which penalizes
+        path-pinned senders (Scout) far beyond the paper's CC."""
         cwnd, alpha = c.cwnd, c.alpha
         r_acks = c.round_acks + n_ack + n_nack
         r_marks = c.round_marks + n_mark + n_nack
@@ -355,29 +304,58 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
             jnp.where(r_marks > 0, cw_cut,
                       jnp.where(spec.fast_increase, cw_fi, cwnd)))
         cwnd = jnp.where(round_done, cw_round, cwnd)
-        r_size = jnp.where(round_done, jnp.maximum(cwnd.astype(jnp.int32), 1),
+        r_size = jnp.where(round_done,
+                           jnp.maximum(cwnd.astype(jnp.int32), 1),
                            c.round_size)
         r_acks = jnp.where(round_done, 0, r_acks)
         r_marks = jnp.where(round_done, 0, r_marks)
         r_nacks = jnp.where(round_done, 0, r_nacks)
         # additive increase per clean ACK; hard reset only on timeout
-        cwnd = jnp.minimum(spec.cwnd_max, cwnd + n_ack / jnp.maximum(cwnd, 1.0))
+        cwnd = jnp.minimum(spec.cwnd_max,
+                           cwnd + n_ack / jnp.maximum(cwnd, 1.0))
         cwnd = jnp.where(n_to > 0, 1.0, cwnd)
+        return cwnd, alpha, r_acks, r_marks, r_nacks, r_size
 
-        # --- Spritz feedback ---
-        spritz = c.spritz
+    def tick(c: Carry, t, lane: Lane | None = None):
+        k_path, k_mark = _tick_keys(c.rng, t)
+        t = t.astype(jnp.int32)
+
+        # ------------- A0. failure timeline events (DESIGN.md §10) ----------
+        (port_up, fail_idx, q_tail0, pstate0, pevent0,
+         trims0) = apply_failure_events(c, t)
+
+        occ = jnp.maximum(q_tail0 - t, 0)
         if batched:
-            sc = SZ.feedback_logic(spritz, scout_cfg, fb_ev, fb_type,
-                                   exp_alpha, path_lat, t)
-            sp = SZ.feedback_logic(spritz, spray_cfg, fb_ev, fb_type,
-                                   exp_alpha, path_lat, t)
-            spritz = _tree_select(
-                is_spritz, _tree_select(scheme == SCOUT, sc, sp), spritz)
-        elif is_spritz:
-            cfg = scout_cfg if scheme_s == SCOUT else spray_cfg
-            spritz = SZ.feedback_logic(spritz, cfg, fb_ev, fb_type,
-                                       exp_alpha, path_lat, t)
-        flicr_marks = c.flicr_marks + n_mark + 8 * (n_nack + n_to)
+            scheme = lane.scheme
+            weights = lane.weights
+            static_path = lane.static_path
+        else:
+            weights = spec_weights
+            static_path = spec_static
+
+        # ---------------- A. feedback arrivals + timeouts -------------------
+        flow_sums = flow_sums_fn(c.pflow)
+        ack_m, nack_m, to_m, sums, fb_ev, fb_type = collect_feedback(
+            c, pstate0, pevent0, t, flow_sums)
+        n_ack, n_mark, n_nack, n_to, n_exp, n_exp_bad = sums
+        g2 = spec.dctcp_g
+        exp_alpha = jnp.where(
+            n_exp > 0,
+            (1 - g2) * c.exp_alpha + g2 * n_exp_bad / jnp.maximum(n_exp, 1),
+            c.exp_alpha)
+
+        cwnd, alpha, r_acks, r_marks, r_nacks, r_size = cc_round(
+            c, n_ack, n_mark, n_nack, n_to)
+
+        # --- sender-policy feedback (one switch over registry branches) ---
+        fb_ctx = PB.FeedbackCtx(t=t, ev=fb_ev, fb_type=fb_type,
+                                ecn_rate=exp_alpha, n_mark=n_mark,
+                                n_nack=n_nack, n_to=n_to)
+        if batched:
+            policy = jax.lax.switch(jnp.clip(scheme, 0, n_pol - 1),
+                                    fb_brs, c.policy, fb_ctx)
+        else:
+            policy = fb_brs[scheme_code](c.policy, fb_ctx)
 
         acked = c.acked + n_ack
         inflight = c.inflight - n_ack - n_nack - n_to
@@ -405,7 +383,8 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         dpsn, has_del = dsums[0], dsums[1] > 0
         is_ooo = has_del & (dpsn != c.exp_psn)
         ooo = c.ooo + is_ooo.astype(jnp.int32)
-        exp_psn = jnp.where(has_del, jnp.maximum(c.exp_psn, dpsn + 1), c.exp_psn)
+        exp_psn = jnp.where(has_del, jnp.maximum(c.exp_psn, dpsn + 1),
+                            c.exp_psn)
 
         # conformance counter: a service event must never cross a down port
         # (the A0 kill rule + enqueue mask conspire to make this impossible)
@@ -449,55 +428,19 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
             n_free, jnp.maximum(win_rank, 0) + 1, side="left"
         ).astype(jnp.int32)  # [F]; == N when out of slots (masked by tgt)
 
-        # path choice.  All candidate selectors consume k_path through the
-        # identical uniform draw, so the batched select and the specialized
-        # branch produce bit-identical choices per scheme.
-        explored = jnp.ones(F, bool)
-        flicr_cur = c.flicr_cur
+        # --- path choice: one switch over the registry's choose_path
+        # branches.  Every policy's sampler consumes k_path through the
+        # identical uniform draw (policies.base.weighted_sample_rows), so
+        # the batched select and the specialized solo branch produce
+        # bit-identical choices per scheme (DESIGN.md §5/§11).
+        send_ctx = PB.SendCtx(rng=k_path, t=t, active=have_slot, occ=occ,
+                              weights=weights, static_path=static_path)
         if batched:
-            p_val = _weighted_sample_rows(k_path, valiant_w)
-            p_w = _weighted_sample_rows(k_path, weights)
-            p_ugal = _ugal_pick(p_val, occ)
-            move = flicr_marks >= spec.flicr_ecn_move
-            p_flicr = jnp.where(move, p_w, c.flicr_cur)
-            is_flicr = scheme == FLICR_W
-            flicr_cur = jnp.where(is_flicr, p_flicr, c.flicr_cur)
-            flicr_marks = jnp.where(is_flicr & move, 0, flicr_marks)
-            sp2, p_sz, explored_sz = SZ.send_logic(
-                spritz, scout_cfg._replace(
-                    variant=jnp.where(scheme == SCOUT, SZ.SCOUT, SZ.SPRAY)),
-                k_path, t, have_slot)
-            spritz = _tree_select(is_spritz, sp2, spritz)
-            is_static = (scheme == MINIMAL) | (scheme == ECMP)
-            path_sel = jnp.where(
-                is_static, static_path,
-                jnp.where(scheme == VALIANT, p_val,
-                          jnp.where((scheme == OPS_U) | (scheme == OPS_W), p_w,
-                                    jnp.where(scheme == UGAL_L, p_ugal,
-                                              jnp.where(is_flicr, p_flicr,
-                                                        p_sz)))))
-            explored = jnp.where(is_spritz, explored_sz, explored)
-        elif is_spritz:
-            spritz, path_sel, explored = SZ.send_logic(
-                spritz,
-                (scout_cfg if scheme_s == SCOUT else spray_cfg),
-                k_path, t, have_slot)
-        elif scheme_s in (MINIMAL, ECMP):
-            path_sel = static_path
-        elif scheme_s == VALIANT:
-            path_sel = _weighted_sample_rows(k_path, valiant_w)
-        elif scheme_s in (OPS_U, OPS_W):
-            path_sel = _weighted_sample_rows(k_path, weights)
-        elif scheme_s == UGAL_L:
-            path_sel = _ugal_pick(_weighted_sample_rows(k_path, valiant_w), occ)
-        elif scheme_s == FLICR_W:
-            move = flicr_marks >= spec.flicr_ecn_move
-            fresh = _weighted_sample_rows(k_path, weights)
-            path_sel = jnp.where(move, fresh, c.flicr_cur)
-            flicr_cur = path_sel
-            flicr_marks = jnp.where(move, 0, flicr_marks)
+            path_sel, explored, policy = jax.lax.switch(
+                jnp.clip(scheme, 0, n_pol - 1), send_brs, policy, send_ctx)
         else:
-            raise ValueError(f"unknown scheme {scheme_s}")
+            path_sel, explored, policy = send_brs[scheme_code](policy,
+                                                               send_ctx)
         if has_bg:  # background jobs stay on static ECMP paths (paper §V-B)
             path_sel = jnp.where(bg_mask, static_path, path_sel)
 
@@ -598,11 +541,34 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
             inflight=inflight, inj_cnt=inj_cnt, exp_psn=exp_psn,
             cwnd=cwnd, alpha=alpha, exp_alpha=exp_alpha,
             round_acks=r_acks, round_marks=r_marks, round_nacks=r_nacks,
-            round_size=r_size, flicr_cur=flicr_cur, flicr_marks=flicr_marks,
-            spritz=spritz,
+            round_size=r_size, policy=policy,
             fct=fct, delivered=delivered, trims=trims, timeouts=timeouts,
             ooo=ooo, retx=retx_stat,
         )
+
+    def _enqueue_rank(cport):
+        """FIFO rank among same-tick enqueues per port, in compacted space.
+
+        Small fabrics: segmented scatter-add rank — a prefix histogram of
+        one-hot port indicators (cumsum of scatter contributions) read back
+        at each packet's own port.  Large fabrics: stable argsort over the
+        M-compacted set (still ~N/M cheaper than the old table-wide sort).
+        Both produce the identical rank: position among this tick's
+        enqueues of the same port, ordered by packet-table index.
+        """
+        if use_onehot_rank:
+            oh = cport[:, None] == jnp.arange(NP_, dtype=jnp.int32)[None, :]
+            pos = jnp.cumsum(oh.astype(jnp.int32), axis=0) * oh
+            return jnp.maximum(pos.sum(-1) - 1, 0)
+        order = jnp.argsort(cport)
+        sorted_port = cport[order]
+        pos = jnp.arange(M, dtype=jnp.int32)
+        is_start = jnp.concatenate([jnp.ones(1, bool),
+                                    sorted_port[1:] != sorted_port[:-1]])
+        seg_start = jax.lax.associative_scan(jnp.maximum,
+                                             jnp.where(is_start, pos, 0))
+        rank_sorted = pos - seg_start
+        return jnp.zeros(M, jnp.int32).at[order].set(rank_sorted)
 
     return tick
 
@@ -700,9 +666,8 @@ def init_carry(spec: SimSpec, seed: int = 0,
         round_acks=jnp.zeros(F, jnp.int32), round_marks=jnp.zeros(F, jnp.int32),
         round_nacks=jnp.zeros(F, jnp.int32),
         round_size=jnp.full(F, max(int(spec.cwnd_init), 1), jnp.int32),
-        flicr_cur=jnp.asarray(sp, jnp.int32),
-        flicr_marks=jnp.zeros(F, jnp.int32),
-        spritz=SZ.init_state(jnp.asarray(w, jnp.float32)),
+        policy=REG.init_state(np.asarray(w, np.float32),
+                              np.asarray(sp, np.int32)),
         fct=jnp.full(F, -1, jnp.int32), delivered=jnp.zeros(F, jnp.int32),
         trims=jnp.zeros(F, jnp.int32), timeouts=jnp.zeros(F, jnp.int32),
         ooo=jnp.zeros(F, jnp.int32), retx=jnp.zeros(F, jnp.int32),
@@ -803,6 +768,23 @@ def _result(carry: Carry, t, steps) -> SimResult:
     )
 
 
+def _carry_state(carry: Carry) -> dict:
+    """Final carry as nested NumPy dicts — the observability hook the
+    conservation/conformance property suites audit.  The stacked policy
+    dict lands under ``"policy"``; ``"spritz"`` stays a top-level alias
+    for pre-refactor callers."""
+    state: dict = {}
+    for k, v in carry._asdict().items():
+        if k == "policy":
+            state["policy"] = {
+                fam: {f: np.asarray(x) for f, x in sub._asdict().items()}
+                for fam, sub in v.items()}
+        else:
+            state[k] = np.asarray(v)
+    state["spritz"] = state["policy"]["spritz"]
+    return state
+
+
 def run(spec: SimSpec, seed: int = 0, chunk: int | None = None,
         stop_flows: np.ndarray | None = None,
         reference: bool = False, return_carry: bool = False):
@@ -814,9 +796,8 @@ def run(spec: SimSpec, seed: int = 0, chunk: int | None = None,
     bit-exact oracle for the event-compressed default).  ``chunk`` is
     accepted for backwards compatibility and ignored: there is no chunked
     host loop any more.  ``return_carry=True`` additionally returns the
-    final :class:`Carry` as a dict of NumPy arrays — the observability
-    hook the conservation/conformance property suites audit
-    (``tests/test_failures.py``).
+    final :class:`Carry` as nested NumPy dicts (``tests/test_failures.py``
+    audits conservation/conformance through it).
     """
     del chunk
     watch = jnp.asarray(_watch_mask(spec, stop_flows))
@@ -828,71 +809,54 @@ def run(spec: SimSpec, seed: int = 0, chunk: int | None = None,
         carry, t, steps = runner(init_carry(spec, seed), watch)
     res = _result(carry, t, steps)
     if return_carry:
-        state = {k: np.asarray(v) for k, v in carry._asdict().items()
-                 if k != "spritz"}
-        state["spritz"] = {k: np.asarray(v)
-                           for k, v in carry.spritz._asdict().items()}
-        return res, state
+        return res, _carry_state(carry)
     return res
 
 
 run_reference = partial(run, reference=True)
 
 
-def lane_arrays(spec: SimSpec, scheme: int) -> tuple[np.ndarray, np.ndarray]:
-    """Derive a scheme lane's (weights, static_path) from a base spec,
-    mirroring ``build_spec``'s per-scheme rules (DESIGN.md §5):
+def lane_arrays(spec: SimSpec, scheme) -> tuple[np.ndarray, np.ndarray]:
+    """Derive a scheme lane's (weights, static_path) from a base spec —
+    a thin delegate to the registry's host lane rules (DESIGN.md §5/§11):
 
-    * SPRAY_U / OPS_U sample uniformly over each flow's live paths;
-    * MINIMAL pins foreground flows to the minimal route;
+    * ``uniform_weights`` schemes (SPRAY_U/OPS_U/REPS) sample uniformly
+      over each flow's live paths;
+    * ``pin_minimal`` schemes (MINIMAL) pin foreground flows to the
+      minimal route;
     * everything else reuses the base spec's Eq.-1 weights / ECMP draw.
 
     The base spec must therefore be built with a *weighted* scheme
-    (anything except SPRAY_U/OPS_U/MINIMAL) so its weights and static
+    (anything except the uniform/minimal ones) so its weights and static
     paths carry the generic values.
     """
-    if scheme in (SPRAY_U, OPS_U):
-        F, P = spec.weights.shape
-        w = np.zeros((F, P), np.float32)
-        for fi in range(F):
-            w[fi, :int(spec.n_paths[fi])] = 1.0
-    else:
-        if spec.scheme in (SPRAY_U, OPS_U):
-            raise ValueError(
-                "cannot derive weighted-scheme lanes from a uniform-weight "
-                "base spec; build the base spec with e.g. SPRAY_W")
-        w = np.asarray(spec.weights, np.float32)
-    if scheme == MINIMAL:
-        sp = np.where(spec.bg_mask, spec.static_path, spec.min_path)
-    else:
-        if spec.scheme == MINIMAL:
-            raise ValueError(
-                "cannot derive ECMP-style lanes from a MINIMAL base spec; "
-                "build the base spec with e.g. SPRAY_W")
-        sp = np.asarray(spec.static_path)
-    return w, np.asarray(sp, np.int32)
+    return REG.lane_arrays(spec, scheme)
 
 
 def run_batch(spec: SimSpec | Sequence[SimSpec],
-              schemes: Sequence[int] | None = None,
+              schemes: Sequence[int | str] | None = None,
               seeds: Sequence[int] = (0,),
               stop_flows: np.ndarray | None = None,
-              reference: bool = False) -> list[SimResult]:
+              reference: bool = False,
+              return_carry: bool = False):
     """Batched driver: one compiled program for a scheme x seed sweep.
 
-    Either pass one base ``spec`` plus ``schemes`` (lane weights/static
-    paths derived via :func:`lane_arrays`), or a sequence of per-scheme
-    specs that share every static field except scheme/weights/static_path.
-    Lanes are vmapped over the whole while_loop driver — scheme-major,
-    seed-minor order — and results come back as a flat list of
-    ``SimResult`` of length ``len(schemes) * len(seeds)``.
+    Either pass one base ``spec`` plus ``schemes`` (registry names or
+    integer codes; lane weights/static paths derived via
+    :func:`lane_arrays`), or a sequence of per-scheme specs that share
+    every static field except scheme/weights/static_path.  Lanes are
+    vmapped over the whole while_loop driver — scheme-major, seed-minor
+    order — and results come back as a flat list of ``SimResult`` of
+    length ``len(schemes) * len(seeds)``.  ``return_carry=True`` returns
+    ``(results, states)`` with one nested-NumPy carry dict per lane.
     """
     if isinstance(spec, SimSpec):
         if schemes is None:
             schemes = [spec.scheme]
+        codes = [REG.as_code(s) for s in schemes]
         base = spec
         lane_specs = []
-        for s in schemes:
+        for s in codes:
             if s == base.scheme:
                 lane_specs.append((s, np.asarray(base.weights, np.float32),
                                    np.asarray(base.static_path, np.int32)))
@@ -930,14 +894,18 @@ def run_batch(spec: SimSpec | Sequence[SimSpec],
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
         carry, t, steps = runner(carry0, watch, lanes)
-    out = []
+    out, states = [], []
     for i in range(len(lane_specs) * len(seeds)):
         lane_carry = jax.tree.map(lambda x: x[i], carry)
         out.append(_result(lane_carry, t[i], steps[i]))
+        if return_carry:
+            states.append(_carry_state(lane_carry))
+    if return_carry:
+        return out, states
     return out
 
 
-def batch_lanes(schemes: Sequence[int], seeds: Sequence[int]
-                ) -> list[tuple[int, int]]:
+def batch_lanes(schemes: Sequence[int | str], seeds: Sequence[int]
+                ) -> list[tuple[int | str, int]]:
     """The (scheme, seed) order ``run_batch`` returns results in."""
     return [(s, seed) for s in schemes for seed in seeds]

@@ -18,11 +18,16 @@ OPS_W = 6
 SCOUT = 7       # Spritz-Scout (weighted)
 SPRAY_U = 8     # Spritz-Spray (uniform)
 SPRAY_W = 9     # Spritz-Spray (weighted)
+REPS = 10       # REPS entropy recycling (arXiv:2407.21625)
 
+# Integer codes are the spec/CSV ABI; names, device functions and host
+# lane rules live in repro.net.policies.registry (DESIGN.md §11) — it
+# validates itself against this table at import time.
 SCHEME_NAMES = {
     MINIMAL: "minimal", VALIANT: "valiant", UGAL_L: "ugal_l", ECMP: "ecmp",
     FLICR_W: "flicr_w", OPS_U: "ops_u", OPS_W: "ops_w",
     SCOUT: "spritz_scout", SPRAY_U: "spritz_spray_u", SPRAY_W: "spritz_spray_w",
+    REPS: "reps",
 }
 SPRITZ_SCHEMES = (SCOUT, SPRAY_U, SPRAY_W)
 

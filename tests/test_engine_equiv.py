@@ -12,7 +12,7 @@ import pytest
 from repro.net.sim import build as B
 from repro.net.sim import engine as E
 from repro.net.sim.failures import FailureSchedule, sample_links, static_plan
-from repro.net.sim.types import (ECMP, FLICR_W, MINIMAL, OPS_U, OPS_W,
+from repro.net.sim.types import (ECMP, FLICR_W, MINIMAL, OPS_U, OPS_W, REPS,
                                  SCHEME_NAMES, SCOUT, SPRAY_U, SPRAY_W,
                                  SPRITZ_SCHEMES, UGAL_L, VALIANT)
 from repro.net.topology.dragonfly import make_dragonfly
@@ -22,8 +22,10 @@ DF = make_dragonfly(4, 2, 2)
 SF = make_slimfly(5, p=2)
 
 # every Spritz variant + every baseline with distinct per-tick state or
-# path-choice logic (FLICR's move/reset state is the riskiest)
-EQ_SCHEMES = list(SPRITZ_SCHEMES) + [ECMP, UGAL_L, FLICR_W, VALIANT, OPS_W]
+# path-choice logic (FLICR's move/reset state is the riskiest), plus the
+# registry-only REPS addition (entropy-cache state, DESIGN.md §11)
+EQ_SCHEMES = list(SPRITZ_SCHEMES) + [ECMP, UGAL_L, FLICR_W, VALIANT, OPS_W,
+                                     REPS]
 
 # staggered starts + mixed sizes exercise injection gaps, queueing, ECN
 # and (via the tiny tick budget) unfinished-flow paths
@@ -55,7 +57,7 @@ def test_compressed_matches_dense_reference(topo, scheme):
 
 def test_run_batch_matches_solo_runs():
     schemes = [MINIMAL, ECMP, UGAL_L, FLICR_W, VALIANT, OPS_W,
-               SCOUT, SPRAY_U, SPRAY_W]
+               SCOUT, SPRAY_U, SPRAY_W, REPS]
     base = B.build_spec(DF, FLOWS, SPRAY_W, n_ticks=1 << 12)
     batch = E.run_batch(base, schemes=schemes, seeds=[0])
     assert len(batch) == len(schemes)
@@ -77,7 +79,7 @@ def test_lane_arrays_uniform_and_minimal():
 
 # ----------------------------------------------------- failure timeline --
 ALL_SCHEMES = [MINIMAL, VALIANT, UGAL_L, ECMP, FLICR_W, OPS_U, OPS_W,
-               SCOUT, SPRAY_U, SPRAY_W]
+               SCOUT, SPRAY_U, SPRAY_W, REPS]
 
 # larger flows so failures land mid-flight (FLOWS finish before tick 60)
 FAIL_FLOWS = [B.Flow(e, 40 + (e % 3), 400, start_tick=4 * e)

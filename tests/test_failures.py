@@ -19,6 +19,7 @@ except ImportError:  # optional dev dep (DESIGN.md §7): only @given tests
     given, settings, st = hyp_stubs()
 
 from repro.core import spritz as S
+from repro.net.policies import registry as REG
 from repro.net.sim import build as B
 from repro.net.sim import engine as E
 from repro.net.sim.failures import FailureSchedule, sample_links
@@ -265,6 +266,36 @@ def test_flapping_link_is_survivable():
     assert res.done.all()
     assert res.down_violations == 0
     _conservation(res, state)
+
+
+# ------------------------------------------- registry conformance sweep --
+# Satellite (DESIGN.md §11): every scheme the policy registry knows —
+# current and future — is automatically checked for zero services across
+# a down port and packet conservation under one mid-run fail/recover
+# plan.  A new scheme registered in repro.net.policies joins this sweep
+# with no test edit (one batched program, every scheme a lane).
+CONF_FLOWS = [B.Flow(e, 40 + (e % 3), 96, start_tick=8 * e)
+              for e in range(5)]
+
+
+@pytest.fixture(scope="module")
+def policy_failover_runs():
+    sched = FailureSchedule(DF).fail_links(60, _links(DF, 3)).recover(2500)
+    base = B.build_spec(DF, CONF_FLOWS, SPRAY_W, n_ticks=1 << 13,
+                        failure_plan=sched, block_ticks=1024)
+    names = [p.name for p in REG.all_policies()]
+    results, states = E.run_batch(base, schemes=names, seeds=[0],
+                                  return_carry=True)
+    return dict(zip(names, zip(results, states)))
+
+
+@pytest.mark.parametrize("name", [p.name for p in REG.all_policies()])
+def test_policy_failover_conformance(name, policy_failover_runs):
+    res, state = policy_failover_runs[name]
+    assert res.down_violations == 0
+    _conservation(res, state)
+    # the lane actually ran traffic into the outage window
+    assert state["inj_cnt"].sum() > 0
 
 
 # ------------------------------------------------------ property suite --

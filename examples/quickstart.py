@@ -55,11 +55,10 @@ print(f"    one train step: loss {float(metrics['loss']):.3f}")
 
 # ------------------------------------------------------- 3. fabric bridge
 from repro.fabric import bridge
-from repro.fabric.flowsim import FL_ECMP, FL_SPRITZ_W
 
 topo_full = make_dragonfly(8, 4, 4)  # paper scale: 1056 endpoints
 rep = bridge.fabric_report(topo_full, "train", shard_bytes=16e6,
-                           schemes=(FL_ECMP, FL_SPRITZ_W))
+                           schemes=("ecmp", "spritz_spray_w"))
 print(f"[3] DP all-reduce (16 MB shards) on Dragonfly-1056:")
 for k, v in rep.items():
     print(f"    {k:10s} collective time {v['fct_us']:8.1f} us")

@@ -8,9 +8,18 @@ the dry-run's compiled HLO gives per-step collective bytes per chip
 low-diameter fabric, expands the dominant collectives into flow sets
 (ring all-reduce / butterfly / MoE all-to-all), and runs the flow-level
 simulator (repro.fabric.flowsim) per scheme.  Output: estimated collective
-completion time under ECMP vs UGAL-L vs Spritz — i.e. *the paper's
+completion time under any registry scheme name — i.e. *the paper's
 technique applied to the framework's own traffic*, refining the analytic
 ``collective_bytes / link_bw`` roofline term with topology contention.
+
+Schemes are sender-policy registry names (DESIGN.md §11/§12): the
+flow-level sweep routes through ``flowsim.simulate_batch`` (one shared
+path table, one lane per scheme) and the packet-level refinement lowers
+the same flow set onto ``engine.run_batch``.  Byte <-> packet <-> tick
+conversions all use the wire constants in ``repro.net.topology.base``
+(``BYTES_PER_TICK`` / ``bytes_to_pkts``): collective payload bytes are
+expanded to *wire* bytes once, so flow-level times, packet counts and
+start ticks stay mutually consistent.
 
 Embedding: mesh device (i, j) -> endpoint id round-robin over switches
 (the 'model' axis lands intra-group where possible — TP traffic stays on
@@ -24,27 +33,17 @@ import dataclasses
 import numpy as np
 
 from repro.fabric import flowsim as FS
-from repro.net.topology.base import LINK_GBPS, TICK_NS, Topology
+from repro.net.topology.base import (BYTES_PER_TICK, BYTES_PER_US, TICK_NS,
+                                     Topology, wire_bytes)
 
-# flow-level scheme ids -> packet-level scheme ids (for packet_level mode)
-_FL_TO_PKT = None
-
-
-def _fl_to_pkt():
-    global _FL_TO_PKT
-    if _FL_TO_PKT is None:
-        from repro.net.sim import types as T
-        _FL_TO_PKT = {FS.FL_MINIMAL: T.MINIMAL, FS.FL_ECMP: T.ECMP,
-                      FS.FL_VALIANT: T.VALIANT, FS.FL_UGAL: T.UGAL_L,
-                      FS.FL_SPRITZ: T.SPRAY_U, FS.FL_SPRITZ_W: T.SPRAY_W}
-    return _FL_TO_PKT
+DEFAULT_SCHEMES = ("ecmp", "ugal_l", "spritz_spray_w")
 
 
 @dataclasses.dataclass
 class CollectiveSpec:
     kind: str          # "allreduce_ring" | "allreduce_butterfly" | "alltoall"
     participants: list[int]     # endpoint ids
-    bytes_per_rank: float
+    bytes_per_rank: float       # payload bytes
 
 
 def embed_mesh(topo: Topology, n_devices: int, tp: int) -> np.ndarray:
@@ -71,7 +70,7 @@ def ring_flows(eps: list[int], bytes_per_rank: float) -> list[FS.FlowSpec]:
     each rank streaming its reduce-scatter+all-gather bytes to its ring
     successor (steady-state pipeline => one long flow per edge)."""
     n = len(eps)
-    vol = 2.0 * (n - 1) / n * bytes_per_rank
+    vol = float(wire_bytes(2.0 * (n - 1) / n * bytes_per_rank))
     return [FS.FlowSpec(eps[i], eps[(i + 1) % n], vol) for i in range(n)]
 
 
@@ -86,6 +85,7 @@ def butterfly_flows(eps: list[int], bytes_per_rank: float) -> list[FS.FlowSpec]:
     while (1 << k) < n:
         d = 1 << k
         vol = bytes_per_rank / (1 << k) if k else bytes_per_rank
+        vol = float(wire_bytes(vol))
         for i in range(n):
             j = i ^ d
             if j < n:
@@ -96,7 +96,7 @@ def butterfly_flows(eps: list[int], bytes_per_rank: float) -> list[FS.FlowSpec]:
 
 def alltoall_flows(eps: list[int], bytes_per_rank: float) -> list[FS.FlowSpec]:
     n = len(eps)
-    per_pair = bytes_per_rank / max(n - 1, 1)
+    per_pair = float(wire_bytes(bytes_per_rank / max(n - 1, 1)))
     out = []
     for i in range(n):
         for j in range(n):
@@ -109,17 +109,15 @@ _EXPAND = {"allreduce_ring": ring_flows,
            "allreduce_butterfly": butterfly_flows,
            "alltoall": alltoall_flows}
 
-
-def collective_time_us(topo: Topology, spec: CollectiveSpec, scheme: int,
+def collective_time_us(topo: Topology, spec: CollectiveSpec, scheme,
                        seed: int = 0) -> dict:
     """Simulate one collective; returns {fct_us, reselections}."""
     flows = _EXPAND[spec.kind]([int(e) for e in spec.participants],
                                spec.bytes_per_rank)
     res = FS.simulate(topo, flows, scheme, seed=seed)
-    # FlowSpec sizes are bytes; link rate = 400 Gb/s = 50 GB/s
-    done = res.fct[res.fct > 0]
+    done = res.fct[res.fct >= 0]       # fct is relative to start; 0 is done
     t_bytes = float(done.max()) if len(done) else float("nan")
-    return {"fct_us": t_bytes / (LINK_GBPS / 8 * 1e3),  # bytes/(B/us)
+    return {"fct_us": t_bytes / BYTES_PER_US,
             "reselections": res.reselections,
             "epochs": res.epochs}
 
@@ -149,62 +147,88 @@ def cell_collectives(topo: Topology, kind: str, shard_bytes: float,
     return specs
 
 
-def fabric_report(topo: Topology, kind: str, shard_bytes: float,
-                  schemes=(FS.FL_ECMP, FS.FL_UGAL, FS.FL_SPRITZ_W),
-                  n_chips: int = 256, tp: int = 16, seed: int = 0,
-                  packet_level: bool = False,
-                  n_ticks: int = 1 << 18) -> dict:
-    """Full bridge: embed, expand, simulate each scheme; returns
-    {scheme_name: max fct_us over the concurrent collectives}.
-
-    ``packet_level=True`` lowers the collective flow set onto the exact
-    packet simulator instead of the flow-level max-min model and runs the
-    whole scheme sweep as ONE batched device program via
-    ``engine.run_batch`` (compiles once; see DESIGN.md §5).  This refines
-    the flow-level estimate with queueing, trimming and CC dynamics, at
-    packet-level cost — use it at reduced topology scales.
-    """
+def cell_flows(topo: Topology, kind: str, shard_bytes: float,
+               n_chips: int = 256, tp: int = 16) -> list[FS.FlowSpec]:
+    """Embed + expand one cell's concurrent collectives into a flow set."""
     emb = embed_mesh(topo, n_chips, tp)
     specs = cell_collectives(topo, kind, shard_bytes, n_chips, tp, emb)
-    # all rings run concurrently: simulate their union as one flow set
-    flows = []
+    flows: list[FS.FlowSpec] = []
     for sp in specs:
         flows.extend(_EXPAND[sp.kind](sp.participants, sp.bytes_per_rank))
+    return flows
+
+
+def fabric_report(topo: Topology, kind: str, shard_bytes: float,
+                  schemes=DEFAULT_SCHEMES,
+                  n_chips: int = 256, tp: int = 16, seed: int = 0,
+                  packet_level: bool = False,
+                  n_ticks: int = 1 << 18,
+                  failure_plan=None, max_paths: int = 64) -> dict:
+    """Full bridge: embed, expand, simulate each scheme; returns
+    {scheme_name: {fct_us, ...}} for the concurrent collective union.
+
+    Flow-level (default) routes through ``flowsim.simulate_batch`` —
+    one shared path table, one lane per registry scheme name, optional
+    ``failure_plan`` (a ``FailureSchedule``/``FailurePlan`` in ticks).
+
+    ``packet_level=True`` lowers the collective flow set onto the exact
+    packet simulator instead and runs the whole scheme sweep as ONE
+    batched device program via ``engine.run_batch`` (compiles once; see
+    DESIGN.md §5) — use it at reduced topology scales.
+    """
+    flows = cell_flows(topo, kind, shard_bytes, n_chips, tp)
     if packet_level:
-        return _packet_report(topo, flows, schemes, seed, n_ticks)
+        return _packet_report(topo, flows, schemes, seed, n_ticks,
+                              failure_plan, max_paths)
     out = {}
-    for scheme in schemes:
-        res = FS.simulate(topo, flows, scheme, seed=seed)
-        done = res.fct[res.fct > 0]
+    sweep = FS.simulate_batch(topo, flows, schemes, seeds=[seed],
+                              failure_plan=failure_plan,
+                              max_paths=max_paths)
+    for name, (res,) in sweep.items():
+        done = res.fct[res.fct >= 0]
         t_bytes = float(done.max()) if len(done) else float("nan")
-        out[FS.FL_NAMES[scheme]] = {
-            "fct_us": t_bytes / (LINK_GBPS / 8 * 1e3),
-            "reselections": res.reselections}
+        out[name] = {
+            "fct_us": t_bytes / BYTES_PER_US,
+            "done_frac": float((res.fct >= 0).mean()),
+            "reselections": res.reselections,
+            "forced": res.forced,
+            "epochs": res.epochs}
     return out
 
 
+def to_packet_flows(flows: list[FS.FlowSpec]) -> list:
+    """Flow-level specs -> packet-engine flows, wire-consistently: sizes
+    and start offsets both convert through ``BYTES_PER_TICK`` (one tick
+    serializes one wire packet), so ``size_pkts * BYTES_PER_TICK``
+    round-trips the wire volume exactly for expander-produced flows."""
+    from repro.net.sim import build as B
+    return [B.Flow(f.src_ep, f.dst_ep,
+                   max(1, int(np.ceil(f.size_bytes / BYTES_PER_TICK))),
+                   start_tick=int(round(f.start / BYTES_PER_TICK)))
+            for f in flows]
+
+
 def _packet_report(topo: Topology, flows: list[FS.FlowSpec], schemes,
-                   seed: int, n_ticks: int) -> dict:
+                   seed: int, n_ticks: int, failure_plan=None,
+                   max_paths: int = 64) -> dict:
     """Exact packet-level scheme sweep over one collective flow set,
-    batched through ``engine.run_batch``."""
+    batched through ``engine.run_batch``.  ``failure_plan``/``max_paths``
+    forward to ``build_spec`` so both simulation levels see the same
+    scenario."""
+    from repro.net.policies import registry as REG
     from repro.net.sim import build as B
     from repro.net.sim import engine as E
     from repro.net.sim.types import SPRAY_W
-    # flow-level time is in bytes at link rate; 1 tick serializes one
-    # 4160 B packet, so start offsets convert at bytes/4160 per tick
-    sim_flows = [B.Flow(f.src_ep, f.dst_ep,
-                        max(1, int(np.ceil(f.size_bytes / 4096))),
-                        start_tick=int(round(f.start / 4160)))
-                 for f in flows]
-    pkt_schemes = [_fl_to_pkt()[s] for s in schemes]
-    base = B.build_spec(topo, sim_flows, SPRAY_W, n_ticks=n_ticks, seed=seed)
-    results = E.run_batch(base, schemes=pkt_schemes, seeds=[seed])
+    base = B.build_spec(topo, to_packet_flows(flows), SPRAY_W,
+                        n_ticks=n_ticks, seed=seed,
+                        failure_plan=failure_plan, max_paths=max_paths)
+    results = E.run_batch(base, schemes=list(schemes), seeds=[seed])
     out = {}
-    for fl_scheme, res in zip(schemes, results):
+    for scheme, res in zip(schemes, results):
         done = res.fct_ticks[res.done]
         fct_us = (float(done.max()) * TICK_NS / 1e3) if len(done) else \
             float("nan")
-        out[FS.FL_NAMES[fl_scheme]] = {
+        out[REG.resolve(scheme).name] = {
             "fct_us": fct_us,
             "done_frac": float(res.done.mean()),
             "trims": int(res.trims.sum()),

@@ -1,21 +1,35 @@
-"""Flow-level max-min fair-share simulator for 1000+ endpoint scale.
+"""Vectorized flow-level max-min simulator for 1000+ endpoint scale.
 
 The packet-level simulator (repro.net.sim) is exact but tick-bound; this
-flow-level model covers the scales the paper's headline experiments run at
-(Dragonfly 1056 / Slim Fly 1134 endpoints) and feeds the trainer-roofline
-bridge (repro.fabric.bridge): collective flow sets in, completion times
-out, per load-balancing scheme.
+flow-level model covers the scales the paper's headline experiments run
+at (Dragonfly 1056 / Slim Fly 1134 endpoints) and feeds the
+trainer-roofline bridge (repro.fabric.bridge): collective flow sets in,
+completion times out, per load-balancing scheme.
 
-Model: progressive filling.  At every epoch the active flows get their
-max-min fair rates (iterative water-filling over link capacities in units
-of link-rate=1.0); time advances to the earliest flow completion; repeat.
-Path selection is scheme-pluggable; the Spritz schemes re-select paths for
-flows whose current path crosses the most-loaded links (the flow-level
-abstraction of ECN-feedback path eviction + weighted resampling — one
-re-selection per epoch bounded by the good-path cache behaviour).
+Model (DESIGN.md §12): progressive filling.  At every epoch the active
+flows get their max-min fair rates — *dense* iterative water-filling
+over a padded ``[F, max_hops]`` flow->link incidence matrix (one
+``bincount`` histogram per fill level, no per-flow Python loops) — time
+advances to the earliest completion / flow start / failure event;
+repeat.  Path selection dispatches through the sender-policy registry
+(``repro.net.policies.registry``): every registered scheme declares a
+host-side :class:`~repro.net.policies.base.FlowLevelRule` describing
+how its per-packet control loop collapses to one re-selection decision
+per epoch (uniform respray, REPS entropy recycling, UGAL first-hop
+compare, Spritz hot-link eviction with hysteresis).  There is no
+flow-level scheme enum any more — names/codes/rules are the registry's.
+
+Failure timelines (``repro.net.sim.failures.FailureSchedule``, DESIGN.md
+§10) are supported: scheduled link-down/recover events mask the
+incidence columns (a down port has zero capacity, so flows pinned
+across it stall at rate 0) and force adaptive lanes to re-select off
+dead paths; ``static`` lanes stall until recovery, mirroring the packet
+engine's ECMP behaviour.
 
 Everything is numpy (host-side); the packet-level simulator remains the
-ground truth for protocol dynamics (trims, OOO, cwnd).
+ground truth for protocol dynamics (trims, OOO, cwnd).  Times are in
+wire bytes at link rate (1 tick == ``BYTES_PER_TICK`` bytes);
+completion times are recorded relative to each flow's ``start``.
 """
 from __future__ import annotations
 
@@ -24,42 +38,35 @@ import dataclasses
 import numpy as np
 
 from repro.net import paths as P
-from repro.net.topology.base import Topology
-
-# scheme ids (mirror repro.net.sim.types semantics at flow level)
-FL_MINIMAL = 0
-FL_ECMP = 1
-FL_VALIANT = 2
-FL_UGAL = 3         # min vs one valiant sample by current path load
-FL_SPRITZ = 4       # adaptive re-selection away from hot links
-FL_SPRITZ_W = 5
-
-FL_NAMES = {FL_MINIMAL: "minimal", FL_ECMP: "ecmp", FL_VALIANT: "valiant",
-            FL_UGAL: "ugal_l", FL_SPRITZ: "spritz", FL_SPRITZ_W: "spritz_w"}
+from repro.net.topology.base import BYTES_PER_TICK, Topology
 
 
 @dataclasses.dataclass
 class FlowSpec:
     src_ep: int
     dst_ep: int
-    size_bytes: float
-    start: float = 0.0
+    size_bytes: float        # bytes serialized at link rate (wire bytes)
+    start: float = 0.0       # byte-time offset (BYTES_PER_TICK per tick)
 
 
 @dataclasses.dataclass
 class FlowResult:
-    fct: np.ndarray          # [F] completion time (in bytes/link-rate units)
-    reselections: int
-    epochs: int
+    fct: np.ndarray          # [F] completion time - start (bytes at link
+    #   rate; -1.0 == never finished — filter with ``fct >= 0``)
+    reselections: int        # accepted path moves
+    epochs: int              # progressive-filling epochs executed
+    forced: int = 0          # moves forced by a failed current path
 
 
 class PathDB:
-    """Per (src_switch, dst_switch) EV path lists with port sequences."""
+    """Per (src_switch, dst_switch) EV path tables, plus the padded
+    per-pair port arrays the vectorized engine gathers from."""
 
     def __init__(self, topo: Topology, max_paths: int = 64):
         self.topo = topo
         self.max_paths = max_paths
         self._cache: dict[tuple[int, int], P.EVTable] = {}
+        self._pair: dict[tuple[int, int], dict] = {}
 
     def table(self, s: int, d: int) -> P.EVTable:
         key = (s, d)
@@ -67,6 +74,27 @@ class PathDB:
             self._cache[key] = P.build_ev_table(self.topo, s, d,
                                                 max_paths=self.max_paths)
         return self._cache[key]
+
+    def pair_arrays(self, s: int, d: int) -> dict:
+        """Padded hop-port matrix (no delivery port), hop counts,
+        latencies and minimal-path index for one switch pair."""
+        key = (s, d)
+        if key not in self._pair:
+            topo, tb = self.topo, self.table(s, d)
+            n = tb.n_paths
+            nh = np.asarray([len(h) for h in tb.hops], np.int32)
+            ports = np.full((n, max(int(nh.max()), 1) if n else 1), -1,
+                            np.int32)
+            for p, hops in enumerate(tb.hops):
+                u = s
+                for hi, v in enumerate(hops):
+                    ports[p, hi] = topo.port_id(u, topo.slot_of_edge[(u, v)])
+                    u = v
+            self._pair[key] = {
+                "ports": ports, "n_hops": nh, "lat": tb.latency_ns,
+                "n_paths": n, "min_path": int(np.argmax(tb.minimal_mask())),
+            }
+        return self._pair[key]
 
     def ports_of(self, fl: FlowSpec, path_idx: int) -> list[int]:
         topo = self.topo
@@ -81,146 +109,447 @@ class PathDB:
         return ports
 
 
-def _maxmin_rates(flow_links: list[np.ndarray], n_links: int,
-                  active: np.ndarray, iters: int = 50) -> np.ndarray:
-    """Iterative water-filling: rates r_f s.t. per-link sum <= 1, max-min."""
-    F = len(flow_links)
+@dataclasses.dataclass
+class FlowTable:
+    """Padded per-flow path tables: the static host-side arrays one
+    ``build_flow_table`` call produces and every scheme lane of
+    :func:`simulate_batch` shares (path enumeration dominates setup at
+    paper scale — build once, sweep all 11 schemes)."""
+
+    topo: Topology
+    max_paths: int
+    path_ports: np.ndarray   # [F, P, H] global port id per hop, -1 pad
+    path_valid: np.ndarray   # [F, P, H] bool
+    path_len: np.ndarray     # [F, P] hops incl. delivery port
+    path_lat: np.ndarray     # [F, P] f64 path latency ns (0 pad)
+    n_paths: np.ndarray      # [F]
+    path_mask: np.ndarray    # [F, P] bool — p < n_paths[f]
+    min_path: np.ndarray     # [F] index of the minimal route
+    size_bytes: np.ndarray   # [F]
+    start: np.ndarray        # [F]
+
+    @property
+    def n_flows(self) -> int:
+        return len(self.n_paths)
+
+    @property
+    def n_links(self) -> int:
+        return self.topo.n_ports
+
+    def weights(self, w_scale: float) -> np.ndarray:
+        """Eq.-1 latency weights at ``w_scale`` for every flow's paths
+        (elementwise identical to ``EVTable.weights``), 0 on padding."""
+        lat = self.path_lat
+        wmax = lat.max(axis=1, keepdims=True)
+        w = wmax / np.maximum(lat, 1e-9)
+        w = np.where(wmax > 0, w, 1.0)       # degenerate same-switch rows
+        w = (w - 1.0) * w_scale + 1.0
+        return np.where(self.path_mask, w, 0.0)
+
+
+def build_flow_table(topo: Topology, flows: list[FlowSpec],
+                     max_paths: int = 64, db: PathDB | None = None
+                     ) -> FlowTable:
+    """Assemble the padded [F, P, H] incidence arrays (cached per switch
+    pair; the per-flow delivery port is appended as the final hop)."""
+    db = db or PathDB(topo, max_paths)
+    F = len(flows)
+    pair_of = [(topo.ep_switch(f.src_ep), topo.ep_switch(f.dst_ep))
+               for f in flows]
+    pairs = {k: db.pair_arrays(*k) for k in set(pair_of)}
+    Pm = max((pa["n_paths"] for pa in pairs.values()), default=1)
+    Hm = max((int(pa["n_hops"].max()) if pa["n_paths"] else 0
+              for pa in pairs.values()), default=0) + 1  # + delivery hop
+    path_ports = np.full((F, Pm, Hm), -1, np.int32)
+    path_len = np.zeros((F, Pm), np.int32)
+    path_lat = np.zeros((F, Pm), np.float64)
+    n_paths = np.zeros(F, np.int32)
+    min_path = np.zeros(F, np.int32)
+    for fi, fl in enumerate(flows):
+        pa = pairs[pair_of[fi]]
+        n = pa["n_paths"]
+        nh = pa["n_hops"]
+        path_ports[fi, :n, :pa["ports"].shape[1]] = pa["ports"]
+        path_ports[fi, np.arange(n), nh] = topo.delivery_port(fl.dst_ep)
+        path_len[fi, :n] = nh + 1
+        path_lat[fi, :n] = pa["lat"]
+        n_paths[fi] = n
+        min_path[fi] = pa["min_path"]
+    return FlowTable(
+        topo=topo, max_paths=max_paths,
+        path_ports=path_ports, path_valid=path_ports >= 0,
+        path_len=path_len, path_lat=path_lat, n_paths=n_paths,
+        path_mask=np.arange(Pm)[None, :] < n_paths[:, None],
+        min_path=min_path,
+        size_bytes=np.asarray([f.size_bytes for f in flows], np.float64),
+        start=np.asarray([f.start for f in flows], np.float64))
+
+
+# ------------------------------------------------------------ water-filling
+def _maxmin_rates_dense(link_idx: np.ndarray, link_valid: np.ndarray,
+                        active: np.ndarray, n_links: int,
+                        cap0: np.ndarray | None = None) -> np.ndarray:
+    """Dense max-min fair rates over the padded incidence matrix.
+
+    ``link_idx [F, H]`` / ``link_valid [F, H]`` are each flow's current
+    links.  The incidence is inverted once per call into a CSR link ->
+    flow index; each fill level then touches only O(n_links) for the
+    bottleneck search plus the flows actually crossing a tight link —
+    per-link unfrozen counts and capacities update incrementally, so a
+    level does NOT rescan the [F, H] matrix (alltoall cells run
+    hundreds of levels per epoch).  ``cap0`` (down-port mask) zeroes
+    failed links, so flows pinned across them freeze at rate 0.
+    """
+    F, H = link_idx.shape
     rates = np.zeros(F)
-    frozen = ~active.copy()
-    cap = np.ones(n_links)
-    # count active flows per link
+    act = np.asarray(active, bool)
+    cap = np.ones(n_links) if cap0 is None else np.asarray(cap0, float).copy()
+    safe = np.where(link_valid, link_idx, 0)
+
+    # CSR inversion over active flows' live links
+    sel = (act[:, None] & link_valid).ravel()
+    ln_flat = safe.ravel()[sel]
+    fl_flat = np.repeat(np.arange(F), H)[sel]
+    order = np.argsort(ln_flat, kind="stable")
+    ln_sorted = ln_flat[order]
+    fl_sorted = fl_flat[order]
+    link_start = np.searchsorted(ln_sorted, np.arange(n_links + 1))
+    cnt = np.bincount(ln_flat, minlength=n_links)
+    frozen = ~act
+    fair = np.empty(n_links)
+
     while True:
-        cnt = np.zeros(n_links)
-        for f in range(F):
-            if not frozen[f]:
-                cnt[flow_links[f]] += 1
         open_links = cnt > 0
         if not open_links.any():
             break
-        fair = np.full(n_links, np.inf)
-        fair[open_links] = cap[open_links] / cnt[open_links]
-        # bottleneck link(s) = smallest fair share
+        fair.fill(np.inf)
+        np.divide(cap, cnt, out=fair, where=open_links)
         b = float(fair.min())
         if not np.isfinite(b):
             break
-        tight = fair <= b + 1e-12
-        newly = np.zeros(F, bool)
-        for f in range(F):
-            if not frozen[f] and tight[flow_links[f]].any():
-                rates[f] = b
-                newly[f] = True
-        if not newly.any():
+        tight = np.where(fair <= b + 1e-12)[0]
+        # flows listed under the tight links (vectorized multi-slice gather)
+        starts = link_start[tight]
+        counts = link_start[tight + 1] - starts
+        offs = np.arange(int(counts.sum())) \
+            - np.repeat(np.cumsum(counts) - counts, counts)
+        cand = fl_sorted[np.repeat(starts, counts) + offs]
+        newly = np.unique(cand[~frozen[cand]])
+        if not len(newly):
             break
-        for f in np.where(newly)[0]:
-            cap[flow_links[f]] = np.maximum(cap[flow_links[f]] - rates[f], 0.0)
-            frozen[f] = True
+        rates[newly] = b
+        frozen[newly] = True
+        dec = np.bincount(safe[newly].ravel()[link_valid[newly].ravel()],
+                          minlength=n_links)
+        cnt -= dec
+        cap = np.maximum(cap - b * dec, 0.0)
     return rates
 
 
-def simulate(topo: Topology, flows: list[FlowSpec], scheme: int,
-             *, seed: int = 0, w_scale: float = 3.0, max_paths: int = 64,
-             hot_frac: float = 0.85, max_epochs: int = 100000
-             ) -> FlowResult:
-    """Run the flow-level simulation; returns per-flow completion times."""
-    rng = np.random.default_rng(seed)
-    db = PathDB(topo, max_paths)
-    F = len(flows)
-    n_links = topo.n_ports
+def _maxmin_rates(flow_links: list[np.ndarray], n_links: int,
+                  active: np.ndarray, iters: int = 50) -> np.ndarray:
+    """List-of-arrays compatibility front-end for the dense kernel (the
+    pre-vectorization signature; property tests pin fairness through
+    it)."""
+    del iters
+    F = len(flow_links)
+    H = max((len(l) for l in flow_links), default=0) or 1
+    idx = np.zeros((F, H), np.int64)
+    valid = np.zeros((F, H), bool)
+    for f, links in enumerate(flow_links):
+        idx[f, :len(links)] = links
+        valid[f, :len(links)] = True
+    return _maxmin_rates_dense(idx, valid, active, n_links)
 
-    # ---- initial path choice -------------------------------------------
+
+# ------------------------------------------------------------- sampling
+def _sample_rows(rng: np.random.Generator, w: np.ndarray) -> np.ndarray:
+    """One weighted index per row (inverse CDF, one uniform per row);
+    all-zero rows return -1."""
+    csum = np.cumsum(w, axis=1)
+    tot = csum[:, -1:]
+    u = rng.random((w.shape[0], 1)) * tot
+    idx = np.minimum((csum < u).sum(axis=1), w.shape[1] - 1)
+    return np.where(tot[:, 0] > 0, idx, -1)
+
+
+def _sample_rows_topk(rng: np.random.Generator, w: np.ndarray,
+                      k: int) -> np.ndarray:
+    """``k`` distinct weighted draws per row in sampled order (Gumbel
+    top-k); columns past a row's positive-weight count are -1."""
+    g = np.log(np.maximum(w, 1e-300)) - np.log(
+        -np.log1p(-rng.random(w.shape)))
+    g = np.where(w > 0, g, -np.inf)
+    if k < w.shape[1]:
+        part = np.argpartition(-g, k - 1, axis=1)[:, :k]
+        inner = np.argsort(-np.take_along_axis(g, part, axis=1), axis=1)
+        order = np.take_along_axis(part, inner, axis=1)
+    else:
+        order = np.argsort(-g, axis=1)[:, :k]
+    valid = np.take_along_axis(w, order, axis=1) > 0
+    return np.where(valid, order, -1)
+
+
+# ---------------------------------------------------------------- engine
+def _registry():
+    from repro.net.policies import registry as REG  # lazy: keeps numpy-only
+    return REG
+
+
+def _init_choice(rule, table: FlowTable, rng: np.random.Generator,
+                 w_scale: float) -> np.ndarray:
+    """Flow-start path choice.  Per-flow draws (not batched) so the
+    stream matches the scalar reference generator call-for-call — init
+    is one-shot, the per-epoch hot path stays dense."""
+    F = table.n_flows
     choice = np.zeros(F, np.int64)
-    for fi, fl in enumerate(flows):
-        tb = db.table(topo.ep_switch(fl.src_ep), topo.ep_switch(fl.dst_ep))
-        w = tb.weights(w_scale)
-        if scheme == FL_MINIMAL:
-            choice[fi] = int(np.argmax(tb.minimal_mask()))
-        elif scheme == FL_ECMP:
-            choice[fi] = rng.integers(tb.n_paths)
-        elif scheme in (FL_VALIANT, FL_SPRITZ):
-            choice[fi] = rng.integers(tb.n_paths)
-        else:  # weighted init
-            choice[fi] = rng.choice(tb.n_paths, p=w / w.sum())
-    flow_links = [np.asarray(db.ports_of(fl, choice[fi]), np.int64)
-                  for fi, fl in enumerate(flows)]
+    if rule.init == "minimal":
+        return table.min_path.astype(np.int64).copy()
+    if rule.init == "uniform":
+        for fi in range(F):
+            choice[fi] = rng.integers(table.n_paths[fi])
+        return choice
+    w = table.weights(w_scale)
+    for fi in range(F):
+        n = int(table.n_paths[fi])
+        wr = w[fi, :n]
+        choice[fi] = rng.choice(n, p=wr / wr.sum())
+    return choice
 
-    remaining = np.array([fl.size_bytes for fl in flows], float)
-    start = np.array([fl.start for fl in flows], float)
+
+def _compile_plan(topo: Topology, failure_plan):
+    """FailureSchedule | FailurePlan -> (event byte-times, ports, ups)."""
+    if failure_plan is None:
+        return None
+    plan = failure_plan.compile() if hasattr(failure_plan, "compile") \
+        else failure_plan
+    return (plan.event_tick.astype(np.float64) * BYTES_PER_TICK,
+            plan.port_id.astype(np.int64), plan.port_up.astype(bool))
+
+
+def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
+             seed: int = 0, w_scale: float = 3.0, max_paths: int = 64,
+             hot_frac: float = 0.85, max_epochs: int = 100000,
+             failure_plan=None, table: FlowTable | None = None
+             ) -> FlowResult:
+    """Run the flow-level simulation for one registry scheme.
+
+    ``scheme`` is a registry name / code / PolicyDef; its
+    ``flow_level`` rule drives path init and per-epoch re-selection.
+    ``table`` shares a prebuilt :class:`FlowTable` across runs
+    (:func:`simulate_batch` does this).  ``failure_plan`` is a
+    ``FailureSchedule`` or compiled ``FailurePlan`` in ticks; events
+    convert to byte-times via ``BYTES_PER_TICK``.
+    """
+    rule = _registry().flow_rule(scheme)
+    table = table if table is not None else build_flow_table(
+        topo, flows, max_paths=max_paths)
+    rng = np.random.default_rng(seed)
+    F = table.n_flows
+    n_links = table.n_links
+    ar = np.arange(F)
+
+    choice = _init_choice(rule, table, rng, w_scale)
+    remaining = table.size_bytes.copy()
+    start = table.start
     fct = np.full(F, -1.0)
+    done = np.zeros(F, bool)
     t = 0.0
-    resel = 0
-    adaptive = scheme in (FL_SPRITZ, FL_SPRITZ_W, FL_UGAL)
+    resel = forced = 0
+    epoch = -1
+
+    plan = _compile_plan(topo, failure_plan)
+    port_up = np.ones(n_links, bool)
+    ev_i = 0
+    path_alive = None        # [F, P] — lazily maintained under a plan
+
+    # candidate-weight matrices per rule (static per run; failure events
+    # additionally mask dead paths at use time)
+    if rule.cands == "uniform":
+        w_cand = table.path_mask.astype(np.float64)
+    elif rule.cands == "eq1":
+        w_cand = table.weights(1.0)
+    else:
+        w_cand = table.weights(w_scale)
+    w_unif = table.path_mask.astype(np.float64)
+
+    def apply_due_events(now: float) -> bool:
+        nonlocal ev_i, path_alive
+        applied = False
+        while ev_i < len(plan[0]) and plan[0][ev_i] <= now + 1e-9:
+            port_up[plan[1][ev_i]] = plan[2][ev_i]
+            ev_i += 1
+            applied = True
+        if applied:
+            path_alive = ~((~port_up)[np.where(table.path_valid,
+                                               table.path_ports, 0)]
+                           & table.path_valid).any(axis=2)
+        return applied
+
+    if plan is not None:
+        apply_due_events(0.0)   # tick <= 0 events are initial conditions
 
     for epoch in range(max_epochs):
+        if plan is not None:
+            apply_due_events(t)
+        next_ev = float(plan[0][ev_i]) if plan is not None \
+            and ev_i < len(plan[0]) else None
+
         active = (remaining > 0) & (start <= t + 1e-12)
         if not active.any():
-            pend = (remaining > 0)
+            pend = remaining > 0
             if not pend.any():
                 break
-            t = float(start[pend].min())
+            t_next = float(start[pend].min())
+            if next_ev is not None:
+                t_next = min(t_next, next_ev)
+            t = t_next
             continue
 
-        # ---- adaptive re-selection (Spritz feedback abstraction) -------
-        if adaptive and epoch > 0:
-            load = np.zeros(n_links)
-            for f in np.where(active)[0]:
-                load[flow_links[f]] += 1
-            hot = load >= max(1.0, np.quantile(load[load > 0], hot_frac)) \
-                if (load > 0).any() else np.zeros(n_links, bool)
-            for f in np.where(active)[0]:
-                if not hot[flow_links[f]].any():
-                    continue
-                fl = flows[f]
-                tb = db.table(topo.ep_switch(fl.src_ep),
-                              topo.ep_switch(fl.dst_ep))
-                if scheme == FL_UGAL:
-                    # local view only: one valiant candidate vs current,
-                    # compared by first-hop load (the UGAL-L information set)
-                    cand = int(rng.integers(tb.n_paths))
-                    cur0 = flow_links[f][0]
-                    cnd0 = db.ports_of(fl, cand)[0]
-                    if load[cnd0] < load[cur0]:
-                        choice[f] = cand
-                        flow_links[f] = np.asarray(db.ports_of(fl, cand),
-                                                   np.int64)
-                        resel += 1
-                    continue
-                # Spritz: end-to-end view — sample a few paths, keep the
-                # least-loaded (the good-path cache converges there).
-                # Hysteresis: move only for a >=20% max-load improvement
-                # (the cache's "reuse until negative feedback" stability).
-                w = tb.weights(w_scale if scheme == FL_SPRITZ_W else 1.0)
-                cands = rng.choice(tb.n_paths, size=min(4, tb.n_paths),
-                                   replace=False,
-                                   p=w / w.sum())
-                cur_load = float(load[flow_links[f]].max())
-                best, best_load = choice[f], 0.8 * cur_load
-                for cand in cands:
-                    pl = np.asarray(db.ports_of(fl, int(cand)), np.int64)
-                    l = float(load[pl].max())
-                    if l < best_load:
-                        best, best_load = int(cand), l
-                if best != choice[f]:
-                    choice[f] = best
-                    flow_links[f] = np.asarray(db.ports_of(fl, best),
-                                               np.int64)
-                    resel += 1
+        cur_ports = table.path_ports[ar, choice]      # [F, H]
+        cur_valid = table.path_valid[ar, choice]
 
-        rates = _maxmin_rates([flow_links[f] for f in range(F)], n_links,
-                              active)
+        # ---- per-epoch re-selection through the registry lane rule ----
+        # epoch 0 runs the forced lane only (dead current paths under a
+        # t<=0 plan): load feedback does not exist yet, and a stalled
+        # epoch 0 would otherwise jump time straight to the recovery
+        # event before any re-selection could run
+        if rule.kind != "static" and (epoch > 0 or plan is not None):
+            sel = (active[:, None] & cur_valid).ravel()
+            load = np.bincount(np.where(cur_valid, cur_ports, 0).ravel()[sel],
+                               minlength=n_links).astype(np.float64)
+            if (load > 0).any():
+                hot = load >= max(1.0, np.quantile(load[load > 0], hot_frac))
+            else:
+                hot = np.zeros(n_links, bool)
+            cross_hot = (hot[np.where(cur_valid, cur_ports, 0)]
+                         & cur_valid).any(axis=1)
+            if plan is not None:
+                dead_cur = ((~port_up)[np.where(cur_valid, cur_ports, 0)]
+                            & cur_valid).any(axis=1)
+            else:
+                dead_cur = np.zeros(F, bool)
+            if epoch == 0:
+                aff = np.where(active & dead_cur)[0]
+            elif rule.kind == "respray":
+                aff = np.where(active)[0]
+            else:
+                aff = np.where(active & (cross_hot | dead_cur))[0]
+            if len(aff):
+                alive = path_alive[aff] if path_alive is not None \
+                    else table.path_mask[aff]
+                cand_w = np.where(alive, w_cand[aff], 0.0)
+                moved = None
+                if rule.kind == "ugal":
+                    # one uniform candidate vs current, by first-hop load
+                    # (the UGAL-L information set)
+                    cand = _sample_rows(rng, np.where(alive, w_unif[aff],
+                                                      0.0))
+                    ok = cand >= 0
+                    cnd0 = table.path_ports[aff, np.maximum(cand, 0), 0]
+                    cur0 = cur_ports[aff, 0]
+                    moved = ok & (dead_cur[aff]
+                                  | (load[cnd0] < load[cur0]))
+                elif rule.kind in ("evict", "respray", "recycle"):
+                    if rule.kind == "recycle":
+                        cand_w = np.where(alive, w_unif[aff], 0.0)
+                    if rule.kind == "evict":
+                        cands = _sample_rows_topk(rng, cand_w, rule.n_cands)
+                        csafe = np.maximum(cands, 0)
+                        cports = table.path_ports[aff[:, None], csafe]
+                        cvalid = (table.path_valid[aff[:, None], csafe]
+                                  & (cands >= 0)[:, :, None])
+                        cload = np.where(cvalid,
+                                         load[np.maximum(cports, 0)],
+                                         0.0).max(axis=2)
+                        cload[cands < 0] = np.inf
+                        key = cload
+                        if rule.latency_pref:
+                            key = cload + table.path_lat[
+                                aff[:, None], csafe] * 1e-12
+                        best_k = np.argmin(key, axis=1)
+                        cand = cands[np.arange(len(aff)), best_k]
+                        best_load = cload[np.arange(len(aff)), best_k]
+                        cur_load = np.where(cur_valid[aff],
+                                            load[np.maximum(cur_ports[aff],
+                                                            0)],
+                                            0.0).max(axis=1)
+                        cur_load = np.where(dead_cur[aff], np.inf,
+                                            cur_load)
+                        moved = (cand >= 0) & (best_load
+                                               < rule.hysteresis * cur_load)
+                    else:
+                        cand = _sample_rows(rng, cand_w)
+                        moved = cand >= 0
+                if moved is not None and moved.any():
+                    tgt = aff[moved]
+                    changed = choice[tgt] != cand[moved]
+                    choice[tgt] = cand[moved]
+                    resel += int(changed.sum())
+                    forced += int((dead_cur[tgt] & changed).sum())
+                    cur_ports = table.path_ports[ar, choice]
+                    cur_valid = table.path_valid[ar, choice]
+
+        # ---- dense progressive filling --------------------------------
+        rates = _maxmin_rates_dense(cur_ports, cur_valid, active, n_links,
+                                    cap0=port_up.astype(np.float64)
+                                    if plan is not None else None)
         rates[~active] = 0.0
         pos = rates > 1e-15
-        if not pos.any():
-            break
-        # time to next completion or next start
-        dt_done = np.min(remaining[pos] / rates[pos])
         future = start[(remaining > 0) & (start > t)]
-        dt = min(dt_done, (future.min() - t) if len(future) else dt_done)
+        if not pos.any():
+            cands_t = [float(future.min())] if len(future) else []
+            if next_ev is not None:
+                cands_t.append(next_ev)
+            if not cands_t:
+                break           # permanently stalled (e.g. static scheme
+            t = min(cands_t)    # pinned across a dead link, no recovery)
+            continue
+        dt = float(np.min(remaining[pos] / rates[pos]))
+        if len(future):
+            dt = min(dt, float(future.min()) - t)
+        if next_ev is not None:
+            dt = min(dt, next_ev - t)
         remaining = remaining - rates * dt
         t += dt
-        done_now = (remaining <= 1e-9) & (fct < 0)
-        fct[done_now] = t
+        done_now = active & (remaining <= 1e-9) & ~done
+        fct[done_now] = t - start[done_now]
+        done[done_now] = True
         remaining[done_now] = 0.0
         if (remaining <= 0).all():
             break
 
-    return FlowResult(fct=fct, reselections=resel, epochs=epoch + 1)
+    return FlowResult(fct=fct, reselections=resel, epochs=epoch + 1,
+                      forced=forced)
+
+
+def simulate_batch(topo: Topology, flows: list[FlowSpec], schemes,
+                   seeds=(0,), *, w_scale: float = 3.0,
+                   max_paths: int = 64, hot_frac: float = 0.85,
+                   max_epochs: int = 100000, failure_plan=None,
+                   table: FlowTable | None = None
+                   ) -> dict[str, list[FlowResult]]:
+    """Scheme x seed sweep over ONE shared :class:`FlowTable`.
+
+    Path enumeration dominates flow-level setup at paper scale; this
+    builds the padded incidence arrays once and runs every (scheme,
+    seed) lane over them.  Returns ``{registry_name: [FlowResult per
+    seed]}`` in registry-name order of the ``schemes`` argument.
+    ``fabric_report`` and ``bench_fabric --scale`` route through here.
+    """
+    REG = _registry()
+    table = table if table is not None else build_flow_table(
+        topo, flows, max_paths=max_paths)
+    names = [REG.resolve(s).name for s in schemes]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate schemes in sweep: {names} — lanes "
+                         "are keyed by registry name")
+    out: dict[str, list[FlowResult]] = {}
+    for name in names:
+        out[name] = [
+            simulate(topo, flows, name, seed=seed, w_scale=w_scale,
+                     max_paths=max_paths, hot_frac=hot_frac,
+                     max_epochs=max_epochs, failure_plan=failure_plan,
+                     table=table)
+            for seed in seeds]
+    return out

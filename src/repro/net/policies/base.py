@@ -69,6 +69,58 @@ class FeedbackCtx(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
+class FlowLevelRule:
+    """Flow-level re-selection abstraction of a scheme (DESIGN.md §12).
+
+    The flow-level engine (``repro.fabric.flowsim``) sees no packets:
+    each policy instead declares how its per-packet control loop
+    collapses to one path-(re)selection decision per progressive-filling
+    epoch.  ``kind`` picks the host-side re-selection lane:
+
+    * ``static``  — pick once at flow start, never move (MINIMAL, ECMP,
+      and — a documented fidelity limit — per-flow VALIANT);
+    * ``respray`` — oblivious redraw every epoch (OPS u/w: the
+      time-average of per-packet spraying);
+    * ``ugal``    — when the current path crosses a hot link, compare
+      against one random candidate by *first-hop* load (the UGAL-L
+      information set);
+    * ``evict``   — when the current path crosses a hot link, sample
+      ``n_cands`` candidates and move to the least-loaded only on a
+      ``>= (1 - hysteresis)`` max-load improvement (Spritz hot-link
+      eviction; the good-path cache's reuse-until-negative-feedback
+      stability);
+    * ``recycle`` — keep the current path while it stays clean, redraw
+      fresh uniform entropy the moment it crosses a hot link (REPS
+      entropy recycling: hot == the ECN mark that stops a recycle).
+
+    ``init`` chooses the flow-start path (``minimal`` | ``uniform`` |
+    ``weighted`` Eq.-1 at the engine's ``w_scale``); ``cands`` the
+    candidate distribution (``uniform`` | ``eq1`` latency weights at
+    scale 1 | ``eq1_scaled`` at the engine's ``w_scale``).
+    ``latency_pref`` breaks candidate-load ties toward lower-latency
+    paths (Scout's latency-sorted buffer).  Failed paths are masked out
+    of every lane's candidate set; a flow whose current path crosses a
+    down port is force-reselected on adaptive lanes (never on
+    ``static``).
+    """
+
+    kind: str
+    init: str = "uniform"
+    cands: str = "uniform"
+    n_cands: int = 4
+    hysteresis: float = 0.8
+    latency_pref: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ("static", "respray", "ugal", "evict", "recycle"):
+            raise ValueError(f"unknown flow-level kind {self.kind!r}")
+        if self.init not in ("minimal", "uniform", "weighted"):
+            raise ValueError(f"unknown flow-level init {self.init!r}")
+        if self.cands not in ("uniform", "eq1", "eq1_scaled"):
+            raise ValueError(f"unknown flow-level cands {self.cands!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class PolicyDef:
     """One registered scheme (see ``registry.register``).
 
@@ -77,7 +129,9 @@ class PolicyDef:
     share a family.  ``uniform_weights`` / ``pin_minimal`` are the
     host-side lane rules ``build_spec`` and ``lane_arrays`` read instead
     of the old integer if-ladders; ``failover`` marks schemes able to
-    adapt around failures (the ``bench_failures`` scheme set).
+    adapt around failures (the ``bench_failures`` scheme set);
+    ``flow_level`` is the scheme's :class:`FlowLevelRule` — required,
+    so every registered scheme runs at flow level (DESIGN.md §12).
     """
 
     name: str
@@ -90,6 +144,7 @@ class PolicyDef:
     uniform_weights: bool = False
     pin_minimal: bool = False
     failover: bool = False
+    flow_level: FlowLevelRule | None = None
     doc: str = ""
 
 

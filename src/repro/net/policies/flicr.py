@@ -62,4 +62,9 @@ def make_policies(codes) -> tuple[PB.PolicyDef, ...]:
         name="flicr_w", code=flicr_w, family=FAMILY, make_cfg=_make_cfg,
         choose_path=_choose_path, on_feedback=_on_feedback,
         init_state=_init_state,
+        # single weighted candidate, move on any improvement: the flowlet
+        # move has no Spritz-style hysteresis
+        flow_level=PB.FlowLevelRule("evict", init="weighted",
+                                    cands="eq1_scaled", n_cands=1,
+                                    hysteresis=1.0),
         doc="FLICR: ECN-triggered weighted path moves (flowlet approx.)"),)

@@ -27,9 +27,12 @@ def make_policies(codes) -> tuple[PB.PolicyDef, ...]:
         PB.PolicyDef(
             name="ops_u", code=ops_u, family=None, make_cfg=_no_cfg,
             choose_path=_choose_path, uniform_weights=True, failover=True,
+            flow_level=PB.FlowLevelRule("respray"),
             doc="oblivious packet spraying, uniform over live paths"),
         PB.PolicyDef(
             name="ops_w", code=ops_w, family=None, make_cfg=_no_cfg,
             choose_path=_choose_path, failover=True,
+            flow_level=PB.FlowLevelRule("respray", init="weighted",
+                                        cands="eq1_scaled"),
             doc="oblivious packet spraying, Eq.-1 weighted"),
     )

@@ -57,6 +57,10 @@ def _build() -> tuple[PB.PolicyDef, ...]:
             raise RuntimeError(
                 f"policy {p.name} (code {p.code}) disagrees with "
                 f"types.SCHEME_NAMES ({want})")
+        if p.flow_level is None:
+            raise RuntimeError(
+                f"policy {p.name} declares no flow_level rule — every "
+                "registered scheme must run at flow level (DESIGN.md §12)")
     return tuple(defs)
 
 
@@ -109,6 +113,13 @@ def names() -> list[str]:
 
 def failover_policies() -> tuple[PB.PolicyDef, ...]:
     return tuple(p for p in _POLICIES if p.failover)
+
+
+def flow_rule(scheme) -> PB.FlowLevelRule:
+    """A scheme's flow-level re-selection rule (DESIGN.md §12) — the
+    host lane the vectorized ``repro.fabric.flowsim`` engine dispatches
+    path init + per-epoch re-selection through."""
+    return resolve(scheme).flow_level
 
 
 # --------------------------------------------------- device-side assembly

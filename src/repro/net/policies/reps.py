@@ -93,4 +93,8 @@ def make_policies(codes) -> tuple[PB.PolicyDef, ...]:
         choose_path=_choose_path, on_feedback=_on_feedback,
         init_state=_init_state,
         uniform_weights=True, failover=True,
+        # flow level: keep the path while its ACKs stay clean (recycled
+        # entropy), redraw fresh uniform entropy when it crosses a hot
+        # link (the ECN mark that stops a recycle) or a failed port
+        flow_level=PB.FlowLevelRule("recycle", n_cands=1),
         doc="REPS: recycle clean-ACK entropies, fresh on ECN/NACK/RTO"),)

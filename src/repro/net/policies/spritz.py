@@ -313,23 +313,35 @@ def _on_feedback(state: SpritzState, cfg: SpritzConfig,
 
 
 def _policy(name: str, code: int, variant: int, *, uniform: bool,
-            doc: str) -> PB.PolicyDef:
+            flow_level: PB.FlowLevelRule, doc: str) -> PB.PolicyDef:
     return PB.PolicyDef(
         name=name, code=code, family=FAMILY,
         make_cfg=_make_cfg(variant),
         choose_path=_choose_path, on_feedback=_on_feedback,
         init_state=_init_state,
-        uniform_weights=uniform, failover=True, doc=doc)
+        uniform_weights=uniform, failover=True, flow_level=flow_level,
+        doc=doc)
 
 
 def make_policies(codes) -> tuple[PB.PolicyDef, ...]:
     """codes: (SCOUT, SPRAY_U, SPRAY_W) integer scheme ids."""
     scout, spray_u, spray_w = codes
+    # Flow level (DESIGN.md §12): all three collapse to hot-link eviction
+    # with hysteresis — sample a few candidates, move only on a clear
+    # max-load win (the good-path cache's reuse-until-negative-feedback
+    # stability).  Scout additionally prefers low-latency candidates on
+    # load ties (its buffer is latency-sorted).
     return (
         _policy("spritz_scout", scout, SCOUT, uniform=False,
+                flow_level=PB.FlowLevelRule("evict", init="weighted",
+                                            cands="eq1_scaled",
+                                            latency_pref=True),
                 doc="Spritz-Scout: latency-sorted good-path cache (Alg. 2)"),
         _policy("spritz_spray_u", spray_u, SPRAY, uniform=True,
+                flow_level=PB.FlowLevelRule("evict", cands="eq1"),
                 doc="Spritz-Spray, uniform weights (Alg. 3)"),
         _policy("spritz_spray_w", spray_w, SPRAY, uniform=False,
+                flow_level=PB.FlowLevelRule("evict", init="weighted",
+                                            cands="eq1_scaled"),
                 doc="Spritz-Spray, Eq.-1 weights (Alg. 3)"),
     )

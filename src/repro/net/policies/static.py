@@ -34,13 +34,19 @@ def make_policies(codes) -> tuple[PB.PolicyDef, ...]:
         PB.PolicyDef(
             name="minimal", code=minimal, family=None, make_cfg=_no_cfg,
             choose_path=_choose_static, pin_minimal=True,
+            flow_level=PB.FlowLevelRule("static", init="minimal"),
             doc="shortest-path routing pinned to the minimal route"),
         PB.PolicyDef(
             name="ecmp", code=ecmp, family=None, make_cfg=_no_cfg,
             choose_path=_choose_static,
+            flow_level=PB.FlowLevelRule("static"),
             doc="per-flow static hash onto one equal-cost path"),
         PB.PolicyDef(
             name="valiant", code=valiant, family=None, make_cfg=_no_cfg,
             choose_path=_choose_valiant, failover=True,
+            # flow-level VALIANT holds one random route per flow — the
+            # per-packet respray is not representable as a single-path
+            # flow (DESIGN.md §12 fidelity limits)
+            flow_level=PB.FlowLevelRule("static"),
             doc="per-packet random intermediate (Valiant) routing"),
     )

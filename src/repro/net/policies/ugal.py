@@ -40,4 +40,5 @@ def make_policies(codes) -> tuple[PB.PolicyDef, ...]:
     return (PB.PolicyDef(
         name="ugal_l", code=ugal_l, family=None, make_cfg=_no_cfg,
         choose_path=_choose_path,
+        flow_level=PB.FlowLevelRule("ugal", init="weighted", n_cands=1),
         doc="UGAL-L: minimal vs Valiant by local queue x hops"),)

@@ -32,6 +32,27 @@ ECN_KMIN_FRAC = 0.2
 ECN_KMAX_FRAC = 0.8
 
 
+# One tick serializes exactly one wire packet: PKT_BYTES (header+payload)
+# bytes cross a 400 Gb/s link per 83.2 ns.  Every byte <-> packet <-> tick
+# conversion in the repo (flow-level byte-times, the fabric bridge's packet
+# lowering, trace arrival sizing) must route through these helpers: mixing
+# the payload constant (4096) with the wire constant (4160) skews starts
+# against sizes by ~1.6%.
+BYTES_PER_TICK = PKT_BYTES
+BYTES_PER_US = LINK_GBPS / 8 * 1e3    # wire bytes per us at link rate
+
+
+def bytes_to_pkts(payload_bytes):
+    """Payload bytes -> packet count (PKT_PAYLOAD_B payload each, min 1)."""
+    return np.maximum(1, np.ceil(np.asarray(payload_bytes, np.float64)
+                                 / PKT_PAYLOAD_B)).astype(np.int64)
+
+
+def wire_bytes(payload_bytes):
+    """Payload bytes -> bytes on the wire (every packet adds PKT_HEADER_B)."""
+    return bytes_to_pkts(payload_bytes) * PKT_BYTES
+
+
 def link_latency_ns(link_type: int) -> float:
     return LOCAL_NS if link_type == LOCAL else GLOBAL_NS
 

@@ -14,22 +14,76 @@ def _ep_group(topo: Topology, ep: int) -> int:
     return int(topo.sw_group[topo.ep_switch(ep)])
 
 
+def _perm_ok(topo: Topology, eps: list[int], perm, off_group: bool) -> bool:
+    """Derangement + (unless single-group) off-group receiver rule."""
+    single = len(set(_ep_group(topo, e) for e in eps)) == 1
+    return all(
+        s != d and (not off_group or single
+                    or _ep_group(topo, s) != _ep_group(topo, d))
+        for s, d in zip(eps, perm))
+
+
+def _offgroup_shift(topo: Topology, eps: list[int],
+                    off_group: bool) -> list[int]:
+    """Deterministic fallback when rejection sampling fails: the first
+    cyclic shift of ``eps`` satisfying the constraints.  Raises if no
+    shift works (e.g. an endpoint set where one group holds more than
+    half the endpoints — no off-group derangement can exist there
+    either, so silently returning an invalid pairing would corrupt the
+    scenario)."""
+    L = len(eps)
+    for shift in range(1, L):
+        perm = [eps[(i + shift) % L] for i in range(L)]
+        if _perm_ok(topo, eps, perm, off_group):
+            return perm
+    raise ValueError(
+        f"no off-group derangement exists for this endpoint set "
+        f"({L} endpoints over "
+        f"{len(set(_ep_group(topo, e) for e in eps))} groups)")
+
+
 def permutation(topo: Topology, size_pkts: int, seed: int = 0,
                 off_group: bool = True, endpoints: list[int] | None = None,
                 bg: bool = False) -> list[Flow]:
     """Random one-to-one permutation; receivers forced outside the sender's
-    group (paper: 'prioritize the receiver to be outside the local group')."""
+    group (paper: 'prioritize the receiver to be outside the local group').
+
+    Each round shuffles and then *repairs* invalid positions by
+    randomized swaps — a bare rejection sample of a full off-group
+    derangement succeeds with probability ~e^-p per round (p endpoints
+    per group), so the pre-fix code nearly always fell through its 200
+    rounds and silently used the last *invalid* draw (self-sends,
+    in-group receivers).  If sampling still fails, fall back to a
+    deterministic cyclic shift; raise when even that cannot satisfy the
+    constraint (no valid assignment exists)."""
     rng = np.random.default_rng(seed)
     eps = list(endpoints) if endpoints is not None else list(range(topo.n_endpoints))
-    for _ in range(200):  # rejection-sample a derangement with off-group rule
-        perm = rng.permutation(eps)
-        ok = all(
-            s != d and (not off_group or _ep_group(topo, s) != _ep_group(topo, d)
-                        or len(set(_ep_group(topo, e) for e in eps)) == 1)
-            for s, d in zip(eps, perm)
-        )
-        if ok:
+    single = len(set(_ep_group(topo, e) for e in eps)) == 1
+
+    def pair_ok(s: int, d: int) -> bool:
+        return s != d and (not off_group or single
+                           or _ep_group(topo, s) != _ep_group(topo, d))
+
+    n = len(eps)
+    perm = None
+    for _ in range(200):
+        cand = [int(x) for x in rng.permutation(eps)]
+        for _sweep in range(4):   # randomized swap repair
+            bad = [i for i in range(n) if not pair_ok(eps[i], cand[i])]
+            if not bad:
+                break
+            for i in bad:
+                for j in rng.integers(0, n, size=16):
+                    j = int(j)
+                    if pair_ok(eps[i], cand[j]) and pair_ok(eps[j], cand[i]):
+                        cand[i], cand[j] = cand[j], cand[i]
+                        break
+        if _perm_ok(topo, eps, cand, off_group):
+            perm = cand
             break
+    if perm is None:
+        perm = _offgroup_shift(topo, eps, off_group)
+    assert all(int(s) != int(d) for s, d in zip(eps, perm))
     return [Flow(int(s), int(d), size_pkts, bg=bg) for s, d in zip(eps, perm)]
 
 
@@ -135,17 +189,27 @@ def motivational(topo: Topology, monitored_pkts: int, bg_pkts: int,
 def incast_bystanders(topo: Topology, n_senders: int, size_pkts: int,
                       seed: int = 0) -> tuple[list[Flow], np.ndarray]:
     """Fig. 8: synchronized incast hotspot + disjoint one-to-one permutation
-    bystanders, all starting at t=0.  Returns (flows, bystander_mask)."""
+    bystanders, all starting at t=0.  Returns (flows, bystander_mask).
+
+    The hotspot receiver is excluded from the sender set (the pre-fix
+    ``range(n_senders)`` could include it once ``n_senders`` passed the
+    receiver's endpoint id, producing a self-flow whose 'sender' was
+    also the hotspot) and from the bystander pairing."""
     rng = np.random.default_rng(seed)
     n = topo.n_endpoints
+    if not 0 < n_senders <= n - 1:
+        raise ValueError(f"n_senders must be in [1, {n - 1}], got {n_senders}")
     receiver = min(160, n - 1)
-    senders = [e for e in range(n_senders)]
+    senders = [e for e in range(n) if e != receiver][:n_senders]
     flows = [Flow(s, receiver, size_pkts) for s in senders]
-    rest = [e for e in range(n) if e not in senders and e != receiver]
+    sender_set = set(senders)
+    rest = [e for e in range(n) if e not in sender_set and e != receiver]
     perm = rng.permutation(rest)
     for s, d in zip(rest, perm):
         if s != d:
             flows.append(Flow(int(s), int(d), size_pkts))
+    assert all(fl.src_ep != fl.dst_ep for fl in flows)
+    assert receiver not in sender_set
     mask = np.zeros(len(flows), bool)
     mask[n_senders:] = True
     return flows, mask

@@ -12,7 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.net.sim.build import Flow
-from repro.net.topology.base import LINK_GBPS, TICK_NS
+from repro.net.topology.base import BYTES_PER_TICK, bytes_to_pkts, wire_bytes
 
 # (bytes, cdf) — DCTCP web-search flow-size distribution
 _WEBSEARCH_CDF = [
@@ -37,31 +37,67 @@ def mean_websearch_bytes() -> float:
     return float((mids * np.diff(cs)).sum())
 
 
+def mean_websearch_wire_bytes() -> float:
+    """Mean *wire* bytes per flow (header per packet included) — the
+    quantity arrival-rate sizing must use so realized link load matches
+    the requested ``load``."""
+    xs = np.array([b for b, _ in _WEBSEARCH_CDF])
+    cs = np.array([c for _, c in _WEBSEARCH_CDF])
+    mids = (xs[1:] + xs[:-1]) / 2
+    return float((wire_bytes(mids) * np.diff(cs)).sum())
+
+
+# serialization (size_pkts ticks at 1 pkt/tick) + a propagation/ACK
+# allowance: the completion-time estimate the simultaneous-sender cap
+# windows over
+_EST_OVERHEAD_TICKS = 16
+
+
 def websearch(topo, duration_ticks: int, load: float = 1.0, seed: int = 0,
               max_senders_per_recv: int = 4, max_flows: int | None = None
               ) -> list[Flow]:
-    """Poisson arrivals sized to `load` x aggregate endpoint bandwidth."""
+    """Poisson arrivals sized to `load` x aggregate endpoint bandwidth.
+
+    ``max_senders_per_recv`` caps *simultaneous* senders per receiver
+    (paper wording): each receiver's window is the set of accepted flows
+    whose estimated completion (start + serialization + overhead) lies
+    after the candidate's start.  The pre-fix code enforced the cap over
+    the whole trace lifetime and silently dropped flows after 8 failed
+    receiver draws, biasing realized load below ``load``; now a flow
+    whose random draws all land on busy receivers falls back to the
+    least-busy receiver, so the flow count — and the realized load — is
+    preserved exactly."""
     rng = np.random.default_rng(seed)
     n_eps = topo.n_endpoints
-    mean_b = mean_websearch_bytes()
-    # per-endpoint arrival rate lambda: load * linerate / mean flow size
-    line_bps = LINK_GBPS * 1e9
-    lam_per_tick = load * line_bps * (TICK_NS * 1e-9) / (8 * mean_b) * n_eps
+    # per-endpoint arrival rate lambda: load * linerate / mean flow size,
+    # in wire bytes on both sides (BYTES_PER_TICK wire bytes per tick)
+    lam_per_tick = load * BYTES_PER_TICK / mean_websearch_wire_bytes() * n_eps
     n_flows = int(lam_per_tick * duration_ticks)
     if max_flows is not None:
         n_flows = min(n_flows, max_flows)
     starts = np.sort(rng.uniform(0, duration_ticks, n_flows)).astype(np.int64)
-    sizes = np.maximum(1, np.ceil(
-        sample_websearch_bytes(rng, n_flows) / 4096)).astype(np.int64)
+    sizes = bytes_to_pkts(sample_websearch_bytes(rng, n_flows))
     srcs = rng.integers(0, n_eps, n_flows)
-    recv_load = np.zeros(n_eps, np.int64)
+    busy_until: list[list[int]] = [[] for _ in range(n_eps)]
     flows = []
+
+    def active(d: int, t0: int) -> int:
+        busy_until[d] = [e for e in busy_until[d] if e > t0]
+        return len(busy_until[d])
+
     for i in range(n_flows):
+        t0 = int(starts[i])
+        src = int(srcs[i])
+        dst = -1
         for _ in range(8):
             d = int(rng.integers(0, n_eps))
-            if d != int(srcs[i]) and recv_load[d] < max_senders_per_recv:
-                recv_load[d] += 1
-                flows.append(Flow(int(srcs[i]), d, int(sizes[i]),
-                                  start_tick=int(starts[i])))
+            if d != src and active(d, t0) < max_senders_per_recv:
+                dst = d
                 break
+        if dst < 0:  # redraw exhausted: least-busy receiver keeps the flow
+            counts = [(active(d, t0), d) for d in range(n_eps) if d != src]
+            dst = min(counts)[1]
+        busy_until[dst].append(t0 + int(sizes[i]) + _EST_OVERHEAD_TICKS)
+        flows.append(Flow(src, dst, int(sizes[i]), start_tick=t0))
+    assert len(flows) == n_flows
     return flows

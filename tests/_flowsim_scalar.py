@@ -1,0 +1,224 @@
+"""FROZEN scalar flow-level simulator — test reference oracle ONLY.
+
+Verbatim copy of ``repro.fabric.flowsim`` as it stood before the
+vectorized registry-unified rewrite (DESIGN.md §12).  ``tests/
+test_flowsim.py`` pins the vectorized engine against this scalar
+implementation on small cells.  Do NOT fix bugs here — two known
+defects are part of the pinned contract and are asserted *against* by
+the regression tests:
+
+* completing flows record the absolute time ``t`` as ``fct`` (correct
+  only when ``start == 0``);
+* a run whose epoch loop never executes (``max_epochs == 0``) raises
+  ``NameError`` because ``epoch`` is unbound at ``FlowResult(...)``.
+
+The per-flow Python loops here are the O(F·L)-per-epoch hot path the
+vectorized engine replaced; keep this module out of production imports.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.net import paths as P
+from repro.net.topology.base import Topology
+
+# scheme ids (mirror repro.net.sim.types semantics at flow level)
+FL_MINIMAL = 0
+FL_ECMP = 1
+FL_VALIANT = 2
+FL_UGAL = 3         # min vs one valiant sample by current path load
+FL_SPRITZ = 4       # adaptive re-selection away from hot links
+FL_SPRITZ_W = 5
+
+FL_NAMES = {FL_MINIMAL: "minimal", FL_ECMP: "ecmp", FL_VALIANT: "valiant",
+            FL_UGAL: "ugal_l", FL_SPRITZ: "spritz", FL_SPRITZ_W: "spritz_w"}
+
+
+@dataclasses.dataclass
+class FlowSpec:
+    src_ep: int
+    dst_ep: int
+    size_bytes: float
+    start: float = 0.0
+
+
+@dataclasses.dataclass
+class FlowResult:
+    fct: np.ndarray          # [F] completion time (in bytes/link-rate units)
+    reselections: int
+    epochs: int
+
+
+class PathDB:
+    """Per (src_switch, dst_switch) EV path lists with port sequences."""
+
+    def __init__(self, topo: Topology, max_paths: int = 64):
+        self.topo = topo
+        self.max_paths = max_paths
+        self._cache: dict[tuple[int, int], P.EVTable] = {}
+
+    def table(self, s: int, d: int) -> P.EVTable:
+        key = (s, d)
+        if key not in self._cache:
+            self._cache[key] = P.build_ev_table(self.topo, s, d,
+                                                max_paths=self.max_paths)
+        return self._cache[key]
+
+    def ports_of(self, fl: FlowSpec, path_idx: int) -> list[int]:
+        topo = self.topo
+        ssw, dsw = topo.ep_switch(fl.src_ep), topo.ep_switch(fl.dst_ep)
+        tb = self.table(ssw, dsw)
+        hops = tb.hops[path_idx]
+        ports, u = [], ssw
+        for v in hops:
+            ports.append(topo.port_id(u, topo.slot_of_edge[(u, v)]))
+            u = v
+        ports.append(topo.delivery_port(fl.dst_ep))
+        return ports
+
+
+def _maxmin_rates(flow_links: list[np.ndarray], n_links: int,
+                  active: np.ndarray, iters: int = 50) -> np.ndarray:
+    """Iterative water-filling: rates r_f s.t. per-link sum <= 1, max-min."""
+    F = len(flow_links)
+    rates = np.zeros(F)
+    frozen = ~active.copy()
+    cap = np.ones(n_links)
+    # count active flows per link
+    while True:
+        cnt = np.zeros(n_links)
+        for f in range(F):
+            if not frozen[f]:
+                cnt[flow_links[f]] += 1
+        open_links = cnt > 0
+        if not open_links.any():
+            break
+        fair = np.full(n_links, np.inf)
+        fair[open_links] = cap[open_links] / cnt[open_links]
+        # bottleneck link(s) = smallest fair share
+        b = float(fair.min())
+        if not np.isfinite(b):
+            break
+        tight = fair <= b + 1e-12
+        newly = np.zeros(F, bool)
+        for f in range(F):
+            if not frozen[f] and tight[flow_links[f]].any():
+                rates[f] = b
+                newly[f] = True
+        if not newly.any():
+            break
+        for f in np.where(newly)[0]:
+            cap[flow_links[f]] = np.maximum(cap[flow_links[f]] - rates[f], 0.0)
+            frozen[f] = True
+    return rates
+
+
+def simulate(topo: Topology, flows: list[FlowSpec], scheme: int,
+             *, seed: int = 0, w_scale: float = 3.0, max_paths: int = 64,
+             hot_frac: float = 0.85, max_epochs: int = 100000
+             ) -> FlowResult:
+    """Run the flow-level simulation; returns per-flow completion times."""
+    rng = np.random.default_rng(seed)
+    db = PathDB(topo, max_paths)
+    F = len(flows)
+    n_links = topo.n_ports
+
+    # ---- initial path choice -------------------------------------------
+    choice = np.zeros(F, np.int64)
+    for fi, fl in enumerate(flows):
+        tb = db.table(topo.ep_switch(fl.src_ep), topo.ep_switch(fl.dst_ep))
+        w = tb.weights(w_scale)
+        if scheme == FL_MINIMAL:
+            choice[fi] = int(np.argmax(tb.minimal_mask()))
+        elif scheme == FL_ECMP:
+            choice[fi] = rng.integers(tb.n_paths)
+        elif scheme in (FL_VALIANT, FL_SPRITZ):
+            choice[fi] = rng.integers(tb.n_paths)
+        else:  # weighted init
+            choice[fi] = rng.choice(tb.n_paths, p=w / w.sum())
+    flow_links = [np.asarray(db.ports_of(fl, choice[fi]), np.int64)
+                  for fi, fl in enumerate(flows)]
+
+    remaining = np.array([fl.size_bytes for fl in flows], float)
+    start = np.array([fl.start for fl in flows], float)
+    fct = np.full(F, -1.0)
+    t = 0.0
+    resel = 0
+    adaptive = scheme in (FL_SPRITZ, FL_SPRITZ_W, FL_UGAL)
+
+    for epoch in range(max_epochs):
+        active = (remaining > 0) & (start <= t + 1e-12)
+        if not active.any():
+            pend = (remaining > 0)
+            if not pend.any():
+                break
+            t = float(start[pend].min())
+            continue
+
+        # ---- adaptive re-selection (Spritz feedback abstraction) -------
+        if adaptive and epoch > 0:
+            load = np.zeros(n_links)
+            for f in np.where(active)[0]:
+                load[flow_links[f]] += 1
+            hot = load >= max(1.0, np.quantile(load[load > 0], hot_frac)) \
+                if (load > 0).any() else np.zeros(n_links, bool)
+            for f in np.where(active)[0]:
+                if not hot[flow_links[f]].any():
+                    continue
+                fl = flows[f]
+                tb = db.table(topo.ep_switch(fl.src_ep),
+                              topo.ep_switch(fl.dst_ep))
+                if scheme == FL_UGAL:
+                    # local view only: one valiant candidate vs current,
+                    # compared by first-hop load (the UGAL-L information set)
+                    cand = int(rng.integers(tb.n_paths))
+                    cur0 = flow_links[f][0]
+                    cnd0 = db.ports_of(fl, cand)[0]
+                    if load[cnd0] < load[cur0]:
+                        choice[f] = cand
+                        flow_links[f] = np.asarray(db.ports_of(fl, cand),
+                                                   np.int64)
+                        resel += 1
+                    continue
+                # Spritz: end-to-end view — sample a few paths, keep the
+                # least-loaded (the good-path cache converges there).
+                # Hysteresis: move only for a >=20% max-load improvement
+                # (the cache's "reuse until negative feedback" stability).
+                w = tb.weights(w_scale if scheme == FL_SPRITZ_W else 1.0)
+                cands = rng.choice(tb.n_paths, size=min(4, tb.n_paths),
+                                   replace=False,
+                                   p=w / w.sum())
+                cur_load = float(load[flow_links[f]].max())
+                best, best_load = choice[f], 0.8 * cur_load
+                for cand in cands:
+                    pl = np.asarray(db.ports_of(fl, int(cand)), np.int64)
+                    l = float(load[pl].max())
+                    if l < best_load:
+                        best, best_load = int(cand), l
+                if best != choice[f]:
+                    choice[f] = best
+                    flow_links[f] = np.asarray(db.ports_of(fl, best),
+                                               np.int64)
+                    resel += 1
+
+        rates = _maxmin_rates([flow_links[f] for f in range(F)], n_links,
+                              active)
+        rates[~active] = 0.0
+        pos = rates > 1e-15
+        if not pos.any():
+            break
+        # time to next completion or next start
+        dt_done = np.min(remaining[pos] / rates[pos])
+        future = start[(remaining > 0) & (start > t)]
+        dt = min(dt_done, (future.min() - t) if len(future) else dt_done)
+        remaining = remaining - rates * dt
+        t += dt
+        done_now = (remaining <= 1e-9) & (fct < 0)
+        fct[done_now] = t
+        remaining[done_now] = 0.0
+        if (remaining <= 0).all():
+            break
+
+    return FlowResult(fct=fct, reselections=resel, epochs=epoch + 1)

@@ -1,0 +1,258 @@
+"""Vectorized flow-level engine: scalar-reference equivalence, registry
+dispatch, failure timelines, and the flow-vs-packet ordering sanity
+check (DESIGN.md §12).
+
+``tests/_flowsim_scalar.py`` is the pre-rewrite scalar implementation,
+frozen verbatim (bugs included).  The six legacy schemes are pinned to
+it: the three static schemes exactly (after path init the run is
+deterministic, and the vectorized init consumes the seed generator
+call-for-call), the three adaptive schemes exactly on contention-free
+cells and within a band under contention (their per-epoch candidate
+draws are batched now — DESIGN.md §12 documents the changed rng
+protocol).
+"""
+import numpy as np
+import pytest
+
+import _flowsim_scalar as OLD
+from repro.fabric import flowsim as FS
+from repro.net.policies import registry as REG
+from repro.net.sim.failures import FailureSchedule
+from repro.net.topology.dragonfly import make_dragonfly
+from repro.net.topology.slimfly import make_slimfly
+
+DF = make_dragonfly(4, 2, 2)
+SF = make_slimfly(5, p=2)
+
+# legacy FL_* id <-> registry name (the enum died with the rewrite)
+LEGACY = [("minimal", OLD.FL_MINIMAL), ("ecmp", OLD.FL_ECMP),
+          ("valiant", OLD.FL_VALIANT), ("ugal_l", OLD.FL_UGAL),
+          ("spritz_spray_u", OLD.FL_SPRITZ),
+          ("spritz_spray_w", OLD.FL_SPRITZ_W)]
+STATIC = LEGACY[:3]
+ADAPTIVE = LEGACY[3:]
+
+
+def _contended_flows(topo, seed=7, pkts=24):
+    rng = np.random.default_rng(seed)
+    n = topo.n_endpoints
+    out = []
+    for s, d in zip(rng.permutation(n), rng.permutation(n)):
+        if s != d:
+            out.append((int(s), int(d), 4096.0 * pkts))
+    return ([FS.FlowSpec(*f) for f in out],
+            [OLD.FlowSpec(*f) for f in out])
+
+
+# ------------------------------------------------- scalar equivalence ----
+@pytest.mark.parametrize("topo", [DF, SF], ids=lambda t: t.name)
+@pytest.mark.parametrize("name,old_id", STATIC)
+def test_static_schemes_match_scalar_exactly(topo, name, old_id):
+    """Post-init the static lanes are rng-free, so the vectorized
+    water-filling must reproduce the scalar trajectory to fp noise."""
+    for seed in (0, 3):
+        new_f, old_f = _contended_flows(topo, seed=seed + 11)
+        r_new = FS.simulate(topo, new_f, name, seed=seed)
+        r_old = OLD.simulate(topo, old_f, old_id, seed=seed)
+        np.testing.assert_allclose(r_new.fct, r_old.fct, rtol=1e-9,
+                                   atol=1e-6)
+        assert r_new.epochs == r_old.epochs
+        assert r_new.reselections == r_old.reselections == 0
+
+
+@pytest.mark.parametrize("name,old_id", ADAPTIVE)
+def test_adaptive_schemes_match_scalar_without_contention(name, old_id):
+    """A single flow never re-selects effectively (it completes in one
+    epoch at rate 1), so adaptive lanes must be exact here too."""
+    r_new = FS.simulate(DF, [FS.FlowSpec(0, 40, 123456.0)], name, seed=1)
+    r_old = OLD.simulate(DF, [OLD.FlowSpec(0, 40, 123456.0)], old_id,
+                         seed=1)
+    assert r_new.fct[0] == r_old.fct[0] == 123456.0
+
+
+@pytest.mark.parametrize("name,old_id", ADAPTIVE)
+def test_adaptive_schemes_track_scalar_under_contention(name, old_id):
+    """The batched candidate draws change the rng stream, so adaptive
+    trajectories diverge; behaviour must still track the scalar: full
+    completion, active re-selection, mean FCT within a band."""
+    new_f, old_f = _contended_flows(DF)
+    r_new = FS.simulate(DF, new_f, name, seed=0)
+    r_old = OLD.simulate(DF, old_f, old_id, seed=0)
+    assert (r_new.fct >= 0).all() and (r_old.fct > 0).all()
+    assert r_new.reselections > 0 and r_old.reselections > 0
+    ratio = r_new.fct.mean() / r_old.fct.mean()
+    assert 0.6 < ratio < 1.6, ratio
+
+
+def test_maxmin_compat_front_end_feasible_and_saturating():
+    """Deterministic fairness pin for the dense kernel through the
+    list-of-arrays compat signature (the hypothesis suite extends this
+    when the optional dep is installed)."""
+    rng = np.random.default_rng(0)
+    fl = [np.unique(rng.integers(0, 6, rng.integers(1, 4)))
+          for _ in range(9)]
+    r = FS._maxmin_rates(fl, 6, np.ones(9, bool))
+    loads = np.zeros(6)
+    for f, links in enumerate(fl):
+        loads[links] += r[f]
+    assert (loads <= 1 + 1e-6).all()
+    assert (r > 0).all()
+    for links in fl:
+        assert loads[links].max() > 1 - 1e-6
+
+
+# ------------------------------------------------ satellite regressions ----
+def test_fct_is_relative_to_start():
+    """Regression: the scalar records the absolute completion time as
+    fct — correct only for start == 0.  The vectorized engine records
+    ``t - start``."""
+    spec = dict(src_ep=0, dst_ep=40, size_bytes=50000.0)
+    start = 1 << 20
+    r_new = FS.simulate(DF, [FS.FlowSpec(**spec, start=start)], "minimal")
+    r_old = OLD.simulate(DF, [OLD.FlowSpec(**spec, start=start)],
+                         OLD.FL_MINIMAL)
+    assert r_new.fct[0] == pytest.approx(50000.0)
+    assert r_old.fct[0] == pytest.approx(start + 50000.0)   # the pre-fix bug
+    assert r_new.fct[0] == pytest.approx(r_old.fct[0] - start)
+
+
+def test_zero_epoch_run_is_defined():
+    """Regression: the scalar leaves ``epoch`` unbound when the epoch
+    loop never executes."""
+    flows_new = [FS.FlowSpec(0, 40, 1000.0)]
+    flows_old = [OLD.FlowSpec(0, 40, 1000.0)]
+    r = FS.simulate(DF, flows_new, "ecmp", max_epochs=0)
+    assert r.epochs == 0 and (r.fct == -1).all()
+    with pytest.raises(NameError):
+        OLD.simulate(DF, flows_old, OLD.FL_ECMP, max_epochs=0)
+
+
+# ------------------------------------------------- registry dispatch ----
+def test_all_registry_schemes_run_at_flow_level():
+    rng = np.random.default_rng(2)
+    n = DF.n_endpoints
+    flows = [FS.FlowSpec(int(s), int(d), 4096.0 * 8)
+             for s, d in zip(range(n), rng.permutation(n)) if s != d]
+    sweep = FS.simulate_batch(DF, flows, REG.names(), seeds=[0])
+    assert sorted(sweep) == sorted(REG.names())
+    for name, (res,) in sweep.items():
+        assert (res.fct >= 0).all(), name
+        assert res.epochs > 0
+
+
+def test_simulate_batch_matches_solo_runs():
+    """Sharing one FlowTable across lanes must not change results."""
+    new_f, _ = _contended_flows(DF, seed=4, pkts=12)
+    sweep = FS.simulate_batch(DF, new_f,
+                              ["ecmp", "ugal_l", "spritz_spray_w"],
+                              seeds=[0, 5])
+    for name, per_seed in sweep.items():
+        for seed, res in zip([0, 5], per_seed):
+            solo = FS.simulate(DF, new_f, name, seed=seed)
+            np.testing.assert_array_equal(res.fct, solo.fct)
+            assert res.reselections == solo.reselections
+
+
+def test_scheme_accepts_code_and_policydef():
+    flows = [FS.FlowSpec(0, 40, 4096.0)]
+    by_name = FS.simulate(DF, flows, "ecmp")
+    by_code = FS.simulate(DF, flows, REG.by_name("ecmp").code)
+    by_def = FS.simulate(DF, flows, REG.by_name("ecmp"))
+    assert by_name.fct[0] == by_code.fct[0] == by_def.fct[0]
+
+
+# -------------------------------------------------- failure timelines ----
+def _global_links(topo):
+    return [(s, int(topo.nbr[s, r])) for s in range(topo.n_switches)
+            for r in range(topo.radix)
+            if topo.nbr[s, r] >= 0 and topo.nbr_type[s, r] == 1]
+
+
+def test_failure_static_stalls_adaptive_routes_around():
+    """DESIGN.md §12 failure masking: a down link has zero capacity, so
+    ECMP flows pinned across it never finish without recovery, while an
+    adaptive lane is force-reselected off the dead path."""
+    new_f, _ = _contended_flows(DF, seed=1, pkts=32)
+    sched = FailureSchedule(DF).fail_links(at=64, links=_global_links(DF)[:4])
+    r_spray = FS.simulate(DF, new_f, "spritz_spray_w", failure_plan=sched)
+    r_ecmp = FS.simulate(DF, new_f, "ecmp", failure_plan=sched)
+    assert (r_spray.fct >= 0).all()
+    assert r_spray.forced > 0
+    assert (r_ecmp.fct < 0).any()          # pinned flows black-holed
+
+
+def test_failure_recovery_unstalls_static_schemes():
+    new_f, _ = _contended_flows(DF, seed=1, pkts=32)
+    recover_at = 1 << 14
+    sched = (FailureSchedule(DF)
+             .fail_links(at=64, links=_global_links(DF)[:4])
+             .recover(at=recover_at))
+    r_ecmp = FS.simulate(DF, new_f, "ecmp", failure_plan=sched)
+    r_spray = FS.simulate(DF, new_f, "spritz_spray_w", failure_plan=sched)
+    assert (r_ecmp.fct >= 0).all()
+    # stalled flows waited out the outage (byte-time of the recovery)
+    from repro.net.topology.base import BYTES_PER_TICK
+    assert r_ecmp.fct.max() > recover_at * BYTES_PER_TICK * 0.5
+    assert r_spray.fct.max() < r_ecmp.fct.max()
+
+
+def test_failure_at_t0_matches_masked_init():
+    """Events at tick <= 0 are initial conditions: adaptive flows move
+    off dead paths in the first epochs and every flow still finishes."""
+    new_f, _ = _contended_flows(DF, seed=9, pkts=8)
+    sched = FailureSchedule(DF).fail_links(at=0, links=_global_links(DF)[:2])
+    res = FS.simulate(DF, new_f, "spritz_spray_u", failure_plan=sched)
+    assert (res.fct >= 0).all()
+
+
+def test_failure_at_t0_forces_reselection_before_time_jumps():
+    """Regression: with a t=0 plan killing a flow's initial path, epoch 0
+    must run the forced re-selection lane — otherwise the all-stalled
+    branch jumps time straight to the (distant) recovery event and the
+    adaptive flow waits out the whole outage despite alive paths."""
+    from repro.net.topology.base import BYTES_PER_TICK
+    flow = [FS.FlowSpec(0, 40, 4096.0 * 10)]
+    table = FS.build_flow_table(DF, flow)
+    # kill exactly the links of the seed-0 initial choice
+    rng = np.random.default_rng(0)
+    init = int(rng.integers(table.n_paths[0]))
+    ports = table.path_ports[0, init]
+    sw_links = []
+    for p in ports[(ports >= 0) & (ports < DF.n_sw_ports)]:
+        u, r = divmod(int(p), DF.radix)
+        sw_links.append((u, int(DF.nbr[u, r])))
+    assert sw_links, "initial path must cross at least one switch link"
+    recover = 1 << 20
+    sched = (FailureSchedule(DF).fail_links(at=0, links=sw_links)
+             .recover(at=recover))
+    res = FS.simulate(DF, flow, "spritz_spray_u", failure_plan=sched)
+    assert res.forced == 1
+    assert 0 <= res.fct[0] < recover * BYTES_PER_TICK / 2
+
+
+# ------------------------------------- flow-level vs packet-level sanity ----
+def test_flow_vs_packet_scheme_ordering_on_adversarial():
+    """Fig. 6 sanity at reduced scale: minimal routing collapses on
+    adversarial traffic while Spritz-Spray spreads it — the flow-level
+    model must reproduce the packet-level *ordering* (the packet run is
+    one batched 2-lane program)."""
+    from repro.net.sim import build as B
+    from repro.net.sim import engine as E
+    from repro.net.workloads import adversarial
+
+    pkt_flows = adversarial(DF, size_pkts=96, seed=1)
+    base = B.build_spec(DF, pkt_flows, "spritz_spray_w", n_ticks=1 << 15)
+    r_min, r_spray = E.run_batch(base, schemes=["minimal",
+                                                "spritz_spray_u"],
+                                 seeds=[0])
+    assert r_min.done.all() and r_spray.done.all()
+    assert r_spray.fct_ticks.mean() < r_min.fct_ticks.mean()
+
+    fl_flows = [FS.FlowSpec(f.src_ep, f.dst_ep, 4096.0 * f.size_pkts)
+                for f in pkt_flows]
+    sweep = FS.simulate_batch(DF, fl_flows, ["minimal", "spritz_spray_u"],
+                              seeds=[0])
+    m = sweep["minimal"][0].fct
+    s = sweep["spritz_spray_u"][0].fct
+    assert (m >= 0).all() and (s >= 0).all()
+    assert s.mean() < m.mean()            # same ordering as packet level

@@ -61,11 +61,16 @@ def test_failures_spritz_completes_with_few_timeouts():
     r_spray = _run(flows, SPRAY_W, failed=failed, n_ticks=1 << 17)
     assert r_spray.done.all()
     r_ecmp = _run(flows, ECMP, failed=failed, n_ticks=1 << 17)
-    # ECMP cannot re-route: flows pinned onto dead links time out repeatedly
-    # (Spritz pays ~one RTO per dead path before w_i=0 blocks it — detection
-    # latency is protocol-inherent — then never re-probes within the run;
-    # measured ratio 2.83x at this scale, plus ECMP leaves flows unfinished)
-    assert r_ecmp.timeouts.sum() > 2.5 * r_spray.timeouts.sum()
+    # ECMP cannot re-route: a flow pinned onto a dead link times out over
+    # and over (RTO livelock), while Spritz pays ~one RTO per dead EV
+    # before w_i=0 blocks it and never re-probes within the run.  With the
+    # fixed off-group permutation every flow crosses global links, so the
+    # discriminator is timeouts *per affected flow* (Spritz probes many
+    # paths once each; ECMP retries one forever), not the total.
+    to_spray = r_spray.timeouts[r_spray.timeouts > 0]
+    to_ecmp = r_ecmp.timeouts[r_ecmp.timeouts > 0]
+    # zero Spritz timeouts would be a perfect score, not a failure
+    assert len(to_spray) == 0 or to_ecmp.mean() > 5 * to_spray.mean()
     spray_done_t = r_spray.fct_ticks.max()
     assert (~r_ecmp.done).any() or r_ecmp.fct_ticks.max() > 2 * spray_done_t
 

@@ -1,0 +1,193 @@
+"""Workload-generator invariants (the PR-4 bug sweep).
+
+Each test here fails on the pre-fix generators:
+
+* ``incast_bystanders`` — the hotspot receiver could land inside the
+  sender set once ``n_senders`` passed its endpoint id (self-flow);
+* ``permutation`` — 200 failed rejection rounds silently returned the
+  last *invalid* permutation (self-sends / in-group receivers);
+* ``websearch`` — ``max_senders_per_recv`` was enforced over the whole
+  trace lifetime and rejected flows were dropped, biasing realized load
+  below ``load``;
+* the bridge's flow-byte -> packet conversion mixed the payload (4096)
+  and wire (4160) constants between sizes and start offsets.
+"""
+import numpy as np
+import pytest
+
+from repro.fabric import bridge
+from repro.fabric.flowsim import FlowSpec
+from repro.net.topology.base import (BYTES_PER_TICK, PKT_BYTES,
+                                     PKT_PAYLOAD_B, bytes_to_pkts,
+                                     wire_bytes)
+from repro.net.topology.dragonfly import make_dragonfly
+from repro.net.topology.slimfly import make_slimfly
+from repro.net.workloads import incast_bystanders, permutation, websearch
+from repro.net.workloads.synthetic import _ep_group, _offgroup_shift
+from repro.net.workloads.trace import (_EST_OVERHEAD_TICKS,
+                                       mean_websearch_wire_bytes)
+
+DF = make_dragonfly(4, 2, 2)
+SF = make_slimfly(5, p=2)
+
+
+# ------------------------------------------------------------- incast ----
+@pytest.mark.parametrize("topo", [DF, SF], ids=lambda t: t.name)
+@pytest.mark.parametrize("n_senders", [4, 40])
+def test_incast_invariants(topo, n_senders):
+    flows, mask = incast_bystanders(topo, n_senders, 16, seed=3)
+    receiver = min(160, topo.n_endpoints - 1)
+    assert all(f.src_ep != f.dst_ep for f in flows)
+    incast = flows[:n_senders]
+    assert len(incast) == n_senders
+    assert all(f.dst_ep == receiver for f in incast)
+    assert receiver not in {f.src_ep for f in incast}
+    # bystanders: disjoint one-to-one permutation avoiding the hotspot
+    by = flows[n_senders:]
+    assert mask.sum() == len(by) and not mask[:n_senders].any()
+    touched = {f.src_ep for f in by} | {f.dst_ep for f in by}
+    assert receiver not in touched
+    assert touched.isdisjoint({f.src_ep for f in incast})
+
+
+def test_incast_receiver_never_a_sender_past_160():
+    """Regression: at > 161 endpoints the receiver is endpoint 160; the
+    pre-fix ``range(n_senders)`` sender set included it once
+    ``n_senders > 160`` — a self-flow whose sender was the hotspot."""
+    topo = make_dragonfly(6, 3, 3)      # 342 endpoints
+    assert topo.n_endpoints > 161
+    flows, mask = incast_bystanders(topo, 200, 8, seed=0)
+    receiver = 160
+    incast = flows[:200]
+    assert all(f.dst_ep == receiver and f.src_ep != receiver
+               for f in incast)
+    assert all(f.src_ep != f.dst_ep for f in flows)
+
+
+def test_incast_rejects_bad_sender_count():
+    with pytest.raises(ValueError):
+        incast_bystanders(DF, DF.n_endpoints, 16)
+    with pytest.raises(ValueError):
+        incast_bystanders(DF, 0, 16)
+
+
+# -------------------------------------------------------- permutation ----
+@pytest.mark.parametrize("topo", [DF, SF], ids=lambda t: t.name)
+@pytest.mark.parametrize("seed", [0, 7])
+def test_permutation_derangement_and_offgroup(topo, seed):
+    flows = permutation(topo, 16, seed=seed)
+    assert len(flows) == topo.n_endpoints
+    assert all(f.src_ep != f.dst_ep for f in flows)
+    assert all(_ep_group(topo, f.src_ep) != _ep_group(topo, f.dst_ep)
+               for f in flows)
+    # one-to-one
+    assert len({f.dst_ep for f in flows}) == len(flows)
+
+
+def test_permutation_subset_and_single_group():
+    # balanced two-group subset: off-group derangement must hold
+    eps = [0, 1, 2, 3, 8, 9, 10, 11]   # DF(4,2,2): groups 0 and 1
+    flows = permutation(DF, 16, seed=5, endpoints=eps)
+    assert all(_ep_group(DF, f.src_ep) != _ep_group(DF, f.dst_ep)
+               for f in flows)
+    # single-group subset: the off-group rule is vacuous, derangement holds
+    flows = permutation(DF, 16, seed=5, endpoints=[0, 1, 2, 3])
+    assert all(f.src_ep != f.dst_ep for f in flows)
+
+
+def test_permutation_fallback_shift_is_valid():
+    """The deterministic fallback itself satisfies the constraints on a
+    set where valid assignments exist."""
+    eps = [0, 1, 2, 3, 8, 9, 10, 11]
+    perm = _offgroup_shift(DF, eps, off_group=True)
+    assert sorted(perm) == sorted(eps)
+    assert all(s != d and _ep_group(DF, s) != _ep_group(DF, d)
+               for s, d in zip(eps, perm))
+
+
+def test_permutation_impossible_set_raises():
+    """Regression: one group holds >half the endpoints, so no off-group
+    derangement exists; the pre-fix code silently returned an invalid
+    permutation (in-group receivers) instead of raising."""
+    eps = [0, 8, 9, 10, 11, 12]        # 1 endpoint of group 0, 5 of group 1
+    with pytest.raises(ValueError):
+        permutation(DF, 16, seed=0, endpoints=eps)
+
+
+# ---------------------------------------------------------- websearch ----
+def test_websearch_flow_count_preserved_under_tight_cap():
+    """Regression: pre-fix, the cap was lifetime-wide and flows rejected
+    8 times were dropped — with cap=1 at most ~n_endpoints flows could
+    ever be admitted.  The windowed cap preserves the Poisson count."""
+    topo = DF
+    duration = 8000
+    flows = websearch(topo, duration, load=0.8, seed=2,
+                      max_senders_per_recv=1)
+    lam = 0.8 * BYTES_PER_TICK / mean_websearch_wire_bytes() \
+        * topo.n_endpoints
+    assert len(flows) == int(lam * duration)
+    assert len(flows) > 3 * topo.n_endpoints   # pre-fix ceiling was n_eps
+
+
+def test_websearch_realized_load_near_requested():
+    topo = DF
+    duration = 20000
+    load = 0.5
+    flows = websearch(topo, duration, load=load, seed=0)
+    wire = sum(f.size_pkts * PKT_BYTES for f in flows)
+    realized = wire / (duration * BYTES_PER_TICK * topo.n_endpoints)
+    assert abs(realized - load) / load < 0.2   # heavy-tailed sample mean
+
+
+def test_websearch_simultaneous_cap_respected_at_low_load():
+    """At moderate load the windowed cap is strict: recompute each
+    receiver's active-sender count (same completion estimate) and check
+    it never exceeds the cap at any admission."""
+    topo = DF
+    cap = 2
+    flows = websearch(topo, 16000, load=0.3, seed=4,
+                      max_senders_per_recv=cap)
+    busy: dict[int, list[int]] = {}
+    for f in sorted(flows, key=lambda f: f.start_tick):
+        acc = [e for e in busy.get(f.dst_ep, []) if e > f.start_tick]
+        assert len(acc) < cap, f"receiver {f.dst_ep} over simultaneous cap"
+        acc.append(f.start_tick + f.size_pkts + _EST_OVERHEAD_TICKS)
+        busy[f.dst_ep] = acc
+    # no self-flows, valid ticks
+    assert all(f.src_ep != f.dst_ep for f in flows)
+    assert all(0 <= f.start_tick < 16000 for f in flows)
+
+
+# ----------------------------------------------- bridge byte conversion ----
+def test_wire_constants_round_trip():
+    assert int(bytes_to_pkts(1)) == 1
+    assert int(bytes_to_pkts(PKT_PAYLOAD_B)) == 1
+    assert int(bytes_to_pkts(PKT_PAYLOAD_B + 1)) == 2
+    assert int(wire_bytes(PKT_PAYLOAD_B)) == PKT_BYTES
+    # wire volume is always whole packets
+    for b in (1, 4096, 5000, 1 << 20):
+        assert int(wire_bytes(b)) % PKT_BYTES == 0
+        assert int(wire_bytes(b)) // PKT_BYTES == int(bytes_to_pkts(b))
+
+
+def test_packet_lowering_uses_one_wire_constant():
+    """Regression: sizes divided by the payload constant while start
+    offsets divided by the wire constant.  Wire-consistently, a flow
+    starting exactly when an equal-volume flow completes must start at
+    that flow's last serialization tick."""
+    for payload in (4096.0, 40000.0, 1.23e6):
+        w = float(wire_bytes(payload))
+        (pk,) = bridge.to_packet_flows([FlowSpec(0, 9, w, start=w)])
+        assert pk.size_pkts * PKT_BYTES == w          # size round-trip
+        assert pk.start_tick == pk.size_pkts          # same constant
+
+
+def test_expanders_produce_wire_volumes():
+    eps = [0, 5, 9, 13]
+    shard = 3e6
+    for flows in (bridge.ring_flows(eps, shard),
+                  bridge.alltoall_flows(eps, shard),
+                  bridge.butterfly_flows(eps, shard)):
+        for f in flows:
+            assert f.size_bytes % PKT_BYTES == 0
+            assert f.src_ep != f.dst_ep

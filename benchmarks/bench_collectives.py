@@ -1,46 +1,21 @@
 """Paper Fig. 7 (left): AI collectives (Allreduce ring/butterfly, Alltoall)
 on an endpoint subset inside a shared network (ECMP permutation background).
-Metric: collective completion time (last flow done)."""
+Metric: collective completion time (last flow done) — the
+``coll_duration_us`` column.
+
+Thin shim over the registered ``collectives.*`` experiment-matrix cells
+(`repro.exp.matrix`, DESIGN.md §13); the CLI is unchanged."""
 from __future__ import annotations
 
 from pathlib import Path
 
-import numpy as np
-
-from benchmarks.common import ALL_SCHEMES, run_schemes, topologies, write_csv
-from repro.net.sim import build as B
-from repro.net.workloads import (allreduce_butterfly, allreduce_ring,
-                                 alltoall)
-from repro.net.workloads.collectives import collective_duration
+from benchmarks.common import run_bench_cells, write_csv
 
 
 def run(scale: str = "small", out_dir: Path = Path("results/bench"),
         schemes=None, quick=False):
-    rows = []
-    m = 128 if scale == "full" else 16
-    total = B.mib_to_pkts(8.0) if scale == "full" else B.mib_to_pkts(1.0)
-    colls = (("allreduce_ring", allreduce_ring),
-             ("allreduce_butterfly", allreduce_butterfly),
-             ("alltoall", alltoall))
-    for tname, topo in topologies(scale).items():
-        for cname, gen in colls:
-            if quick and (tname, cname) != ("dragonfly", "alltoall"):
-                continue
-            flows, mask = gen(topo, m, total, seed=2, with_background=True,
-                              bg_pkts=256 if scale != "full" else 1024)
-            print(f"[collectives/{tname}/{cname}] {int(mask.sum())} coll flows"
-                  f" + {int((~mask).sum())} bg")
-            got = run_schemes(topo, flows, schemes or ALL_SCHEMES,
-                              n_ticks=1 << 18,
-                              stop_flows=np.where(mask)[0],
-                              spec_kw=dict(n_pkt_cap=1 << 17), chunk=4096,
-                              masks={"coll": mask})
-            for row, res in got:
-                row["collective"] = cname
-                dur = collective_duration(res.fct_ticks,
-                                          np.zeros(len(flows)), mask)
-                row["coll_duration_us"] = float(B.ticks_to_us(dur)) if dur >= 0 else -1
-                rows.append(row)
+    rows = run_bench_cells("collectives", scale, schemes=schemes,
+                           quick=quick)
     write_csv(out_dir / "collectives.csv", rows)
     return rows
 

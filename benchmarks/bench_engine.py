@@ -43,7 +43,6 @@ import tempfile
 import time
 from pathlib import Path
 
-import numpy as np
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 QUICK_TOLERANCE = 0.25   # --quick: allowed wall-time / compression slack
@@ -70,20 +69,18 @@ def _compression_probe():
     drain tail): the horizon driver covers it in a few hundred steps, a
     dense-degenerate driver needs every tick.  Deterministic (no wall
     clock), so it is the discriminating compression gate the saturated
-    micro cell cannot be."""
-    from repro.net.sim import build as B
-    from repro.net.sim import engine as E
-    from repro.net.topology.dragonfly import make_dragonfly
+    micro cell cannot be.  The definition is the registered matrix cell
+    ``engine.dragonfly.probe.smoke`` (DESIGN.md §13) so the baseline
+    this bench writes and the smoke-tier guard can never drift."""
+    from repro.exp.matrix import CELLS
+    from repro.exp.packet import run_packet_cell
 
-    topo = make_dragonfly(4, 2, 2)
-    flows = [B.Flow(0, 40, 64, start_tick=2048)]
-    spec = B.build_spec(topo, flows, "ecmp", n_ticks=1 << 13)
-    res = E.run(spec)
+    (row,) = run_packet_cell(CELLS["engine.dragonfly.probe.smoke"],
+                             ["ecmp"], [0], verbose=False)
     return {
-        "steps_executed": int(res.steps_executed),
-        "ticks_simulated": int(res.ticks_simulated),
-        "compression": round(res.ticks_simulated
-                             / max(res.steps_executed, 1), 3),
+        "steps_executed": row["steps"],
+        "ticks_simulated": row["ticks"],
+        "compression": row["compression"],
     }
 
 

@@ -1,257 +1,86 @@
 """Fabric bridge benchmark: trainer collectives on the low-diameter
 fabric, flow-level at paper scale.
 
-Two modes:
+Thin shim over the registered ``fabric.*`` experiment-matrix cells
+(`repro.exp.matrix`, DESIGN.md §13); the CLI is unchanged:
 
-* default (``small``/``mid`` scale, the ``run.py`` suite): each arch's
-  dominant collective replayed on the full-size Dragonfly under the
-  default scheme trio, plus a packet-level refinement cell at reduced
-  scale — the trainer-side collective-roofline term refined with
-  topology contention.
+* default (``small``/``mid`` scale, the ``run.py`` suite): the legacy
+  arch-driven cells — each arch's dominant collective replayed on the
+  full-size Dragonfly under the default scheme trio, plus a
+  packet-level refinement cell at reduced scale.
 
-* ``--scale full``: the paper-scale cell suite — Dragonfly-1056 and
-  Slim Fly-1134, train (DP all-reduce rings) + alltoall (MoE dispatch)
-  + a mid-run failure timeline (links down at 1/4 of the solo horizon,
-  recovered later), ALL 11 registry schemes through
-  ``flowsim.simulate_batch`` (one shared path table per cell).  When
-  invoked directly (``python -m benchmarks.bench_fabric``) it refreshes
-  ``BENCH_fabric.json`` at the repo root — wall times (informational
-  only), re-selection/epoch counters and FCT ratios; the umbrella
-  ``benchmarks.run`` sweep never rewrites the baseline.
+* ``--scale full``: the paper-scale full-tier cells — Dragonfly-1056
+  and Slim Fly-1134, train + alltoall + mid-run failure, ALL registry
+  schemes through ``flowsim.simulate_batch``.  When invoked directly
+  (``python -m benchmarks.bench_fabric``) it also re-runs the
+  quick-config cells and refreshes ``BENCH_fabric.json`` at the repo
+  root — the checked-in baseline the matrix guards compare against;
+  the umbrella ``benchmarks.run`` sweep never rewrites it.
 
-``--scale full --quick`` is the CI smoke + perf guard: reduced chip
-counts/shards on the same paper-scale topologies, compared against the
-checked-in ``BENCH_fabric.json`` on **counters and ratios only** —
-completion fractions, epoch/re-selection counts, per-scheme FCT ratio
-vs ECMP.  Wall time is recorded but never gated (shared-container
-variance; see DESIGN.md §12).  The guard never rewrites the baseline;
-run ``--scale full`` to refresh it.
+* ``--scale full --quick``: the CI smoke + guard — the smoke-tier
+  fabric cells, gated on **counters and ratios only** against
+  ``BENCH_fabric.json`` (wall time recorded, never gated; see
+  DESIGN.md §12).
 """
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
 
+from benchmarks.common import run_bench_cells, scheme_names, write_csv
 from repro.fabric import bridge
-from repro.fabric import flowsim as FS
-from repro.net.policies import registry as REG
-from repro.net.sim.failures import FailureSchedule
-from repro.net.topology.base import BYTES_PER_TICK, BYTES_PER_US, GLOBAL
 from repro.net.topology.dragonfly import make_dragonfly
-from repro.net.topology.slimfly import make_slimfly
-from benchmarks.common import write_csv
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 BASELINE = REPO_ROOT / "BENCH_fabric.json"
-QUICK_TOLERANCE = 0.25
+
+def _fabric_cell_ids(tier: str) -> list[str]:
+    """The registered fabric cells of one tier — sourced from the
+    matrix so a newly registered cell cannot be silently omitted from
+    the ``BENCH_fabric.json`` refresh."""
+    from repro.exp import matrix
+    return [c.cell_id for c in matrix.cells(tier=tier, bench="fabric")]
+
+_SCHEME_KEYS = ("fct_us", "fct_mean_us", "done_frac", "reselections",
+                "forced", "epochs", "wall_s", "fct_ratio_vs_ecmp")
 
 
-# paper-scale cell suite: chips/shards per (quick?) budget; topologies
-# are ALWAYS the 1056/1134-endpoint instances.  Adaptive flow-level
-# epochs scale ~linearly with flow count (one completion per epoch), so
-# the alltoall cells bound chips, not topology size.
-_CELLS = {
-    False: {"train": dict(n_chips=None, tp=16, shard=32e6),
-            "alltoall": dict(n_chips=192, tp=16, shard=8e6)},
-    True: {"train": dict(n_chips=256, tp=16, shard=4e6),
-           "alltoall": dict(n_chips=128, tp=16, shard=2e6)},
-}
-_FAIL_LINKS = 8
-_MAX_PATHS = 32   # FatPaths-style endpoint-table subset (paths.py §III-C)
-# midrun outage: down at 1/4 of the solo horizon, recovered at 16x — the
-# congested completion runs ~5-10x solo, so a solo-scale outage would be
-# absorbed by contention slack and static schemes would show no hit
-_FAIL_AT_FRAC, _RECOVER_AT = 4, 16
-
-
-def _scale_topos():
-    return {"dragonfly1056": make_dragonfly(8, 4, 4),
-            "slimfly1134": make_slimfly(9)}
-
-
-def _loaded_global_links(topo, flows, k):
-    """The ``k`` global links most used by the flow set's minimal routes
-    — failing *these* guarantees the outage intersects the workload (a
-    uniformly sampled link set usually misses a sub-fabric cell
-    entirely, and the failure scenario degenerates to a no-op)."""
-    from collections import Counter
-    cnt = Counter()
-    for f in flows:
-        u = topo.ep_switch(f.src_ep)
-        for v in topo.static_route(u, topo.ep_switch(f.dst_ep)):
-            r = topo.slot_of_edge[(u, v)]
-            if topo.nbr_type[u, r] == GLOBAL:
-                cnt[(min(u, v), max(u, v))] += 1
-            u = v
-    return [link for link, _ in cnt.most_common(k)]
-
-
-def _run_cell(topo, flows, schemes, failure_plan=None, table=None):
-    """All schemes over one flow set through ``simulate_batch`` with a
-    shared path table; per-scheme counters + informational wall time.
-    Returns ``(cell, table)`` so callers can reuse the path table for a
-    same-flow-set scenario variant (enumeration dominates setup)."""
-    t0 = time.time()
-    if table is None:
-        table = FS.build_flow_table(topo, flows, max_paths=_MAX_PATHS)
-    cell = {"n_flows": len(flows),
-            "table_wall_s": round(time.time() - t0, 2), "schemes": {}}
-    for name in schemes:
-        t0 = time.time()
-        (res,) = FS.simulate_batch(topo, flows, [name], seeds=[0],
-                                   failure_plan=failure_plan, table=table,
-                                   max_paths=_MAX_PATHS)[name]
-        wall = time.time() - t0
-        done = res.fct >= 0
-        cell["schemes"][name] = {
-            "fct_us": round(float(res.fct[done].max()) / BYTES_PER_US, 1)
-            if done.any() else -1.0,
-            "fct_mean_us": round(float(res.fct[done].mean())
-                                 / BYTES_PER_US, 1) if done.any() else -1.0,
-            "done_frac": round(float(done.mean()), 4),
-            "reselections": int(res.reselections),
-            "forced": int(res.forced),
-            "epochs": int(res.epochs),
-            "wall_s": round(wall, 2),
-        }
-    ecmp = cell["schemes"].get("ecmp", {}).get("fct_us", -1.0)
-    if ecmp and ecmp > 0:
-        for s, v in cell["schemes"].items():
-            if v["fct_us"] > 0:
-                v["fct_ratio_vs_ecmp"] = round(v["fct_us"] / ecmp, 3)
-    return cell, table
-
-
-def _scale_cells(quick: bool, schemes) -> dict:
-    out = {}
-    for tname, topo in _scale_topos().items():
-        out[tname] = {}
-        train_flows = train_table = None
-        for cname, cfg in _CELLS[quick].items():
-            n_chips = cfg["n_chips"] or (topo.n_endpoints
-                                         // cfg["tp"]) * cfg["tp"]
-            kind = "train" if cname == "train" else "alltoall"
-            flows = bridge.cell_flows(topo, kind, cfg["shard"],
-                                      n_chips=n_chips, tp=cfg["tp"])
-            print(f"[fabric --scale] {tname}/{cname}: {len(flows)} flows, "
-                  f"{n_chips} chips", flush=True)
-            cell, table = _run_cell(topo, flows, schemes)
-            if cname == "train":
-                train_flows, train_table = flows, table
-            cell["config"] = dict(cfg, n_chips=n_chips)
-            out[tname][cname] = cell
-            for s, v in cell["schemes"].items():
-                print(f"   {s:16s} {v}", flush=True)
-        # mid-run failure timeline over the train flow set (reusing its
-        # path table — enumeration dominates setup at paper scale): the
-        # most loaded global links go down at 1/4 of the solo horizon
-        # and recover at 16x (outliving contention slack)
-        cfg = _CELLS[quick]["train"]
-        n_chips = cfg["n_chips"] or (topo.n_endpoints
-                                     // cfg["tp"]) * cfg["tp"]
-        flows = train_flows
-        horizon = int(max(f.size_bytes for f in flows) / BYTES_PER_TICK)
-        fail_at = max(1, horizon // _FAIL_AT_FRAC)
-        recover_at = horizon * _RECOVER_AT
-        sched = (FailureSchedule(topo)
-                 .fail_links(at=fail_at,
-                             links=_loaded_global_links(topo, flows,
-                                                        _FAIL_LINKS))
-                 .recover(at=recover_at))
-        print(f"[fabric --scale] {tname}/midrun_failure: "
-              f"{_FAIL_LINKS} links down @{fail_at}t, up @{recover_at}t",
-              flush=True)
-        cell, _ = _run_cell(topo, flows, schemes, failure_plan=sched,
-                            table=train_table)
-        cell["config"] = dict(cfg, n_chips=n_chips, fail_at=fail_at,
-                              recover_at=recover_at, n_links=_FAIL_LINKS)
-        out[tname]["midrun_failure"] = cell
-        for s, v in cell["schemes"].items():
-            print(f"   {s:16s} {v}", flush=True)
+def _rows_to_cells(rows) -> dict:
+    """Flat matrix rows -> the nested ``{topo: {cell: {schemes: …}}}``
+    tree ``BENCH_fabric.json`` keeps (and the matrix guards read)."""
+    out: dict = {}
+    for r in rows:
+        if r.get("seed", 0) != 0:
+            continue
+        cname = r["cell_id"].split(".")[2]
+        cell = out.setdefault(r["topology"], {}).setdefault(
+            cname, {"schemes": {}})
+        cell["schemes"][r["scheme"]] = {
+            k: r[k] for k in _SCHEME_KEYS if k in r}
     return out
-
-
-def _within(cur, base, tol=QUICK_TOLERANCE) -> bool:
-    if base == 0:
-        return cur == 0
-    return abs(cur - base) <= tol * abs(base)
-
-
-def _guard(quick_cells: dict, names) -> list[str]:
-    """Compare quick cells vs the checked-in baseline: counters/ratios
-    only — never wall time (container variance rule).  Only the
-    schemes actually run (``names`` — the ``--schemes`` filter) are
-    compared."""
-    if not BASELINE.exists():
-        return [f"missing baseline {BASELINE} — run --scale full first"]
-    base = json.loads(BASELINE.read_text()).get("quick_cells", {})
-    fails = []
-    for tname, cells in base.items():
-        for cname, bcell in cells.items():
-            cell = quick_cells.get(tname, {}).get(cname)
-            if cell is None:
-                fails.append(f"{tname}/{cname}: cell missing")
-                continue
-            b_ecmp = bcell["schemes"].get("ecmp", {}).get("fct_us", -1)
-            c_ecmp = cell["schemes"].get("ecmp", {}).get("fct_us", -1)
-            for s, b in bcell["schemes"].items():
-                if s not in names:
-                    continue
-                c = cell["schemes"].get(s)
-                tag = f"{tname}/{cname}/{s}"
-                if c is None:
-                    fails.append(f"{tag}: scheme missing")
-                    continue
-                if abs(c["done_frac"] - b["done_frac"]) > 0.02:
-                    fails.append(f"{tag}: done_frac {c['done_frac']} vs "
-                                 f"baseline {b['done_frac']}")
-                for key in ("epochs", "reselections"):
-                    if b[key] >= 20 and not _within(c[key], b[key]):
-                        fails.append(f"{tag}: {key} {c[key]} vs baseline "
-                                     f"{b[key]} ±{QUICK_TOLERANCE:.0%}")
-                if b_ecmp > 0 and c_ecmp > 0 and b["fct_us"] > 0 \
-                        and c["fct_us"] > 0:
-                    br, cr = b["fct_us"] / b_ecmp, c["fct_us"] / c_ecmp
-                    if not _within(cr, br):
-                        fails.append(f"{tag}: fct ratio vs ecmp {cr:.3f} "
-                                     f"vs baseline {br:.3f} "
-                                     f"±{QUICK_TOLERANCE:.0%}")
-    return fails
-
-
-def _cells_to_rows(cells: dict) -> list[dict]:
-    rows = []
-    for tname, per_cell in cells.items():
-        for cname, cell in per_cell.items():
-            for s, v in cell["schemes"].items():
-                rows.append(dict(topology=tname, workload=cname, scheme=s,
-                                 **v))
-    return rows
 
 
 def _run_scale(out_dir: Path, quick: bool, schemes,
                write_baseline: bool = False) -> list[dict]:
-    names = [REG.resolve(s).name for s in schemes] if schemes \
-        else REG.names()
-    report = {"config": {"max_paths": _MAX_PATHS, "seeds": [0],
-                         "cells": _CELLS[False], "quick_cells": _CELLS[True],
-                         "note": "wall_s informational only; the quick "
-                                 "guard gates counters/ratios"}}
-    report["quick_cells"] = _scale_cells(True, names)
     if quick:
-        fails = _guard(report["quick_cells"], names)
-        out_dir.mkdir(parents=True, exist_ok=True)
-        (out_dir / "fabric_quick.json").write_text(
-            json.dumps(report, indent=1))
-        write_csv(out_dir / "fabric_scale.csv",
-                  _cells_to_rows(report["quick_cells"]))
-        if fails:
-            raise SystemExit("fabric flow-level regression vs "
-                             "BENCH_fabric.json: " + "; ".join(fails))
+        rows = run_bench_cells("fabric", "full", schemes=schemes,
+                               quick=True, check=True)
+        write_csv(out_dir / "fabric_scale.csv", rows)
         print("[fabric --scale --quick] OK — within tolerance", flush=True)
-        return _cells_to_rows(report["quick_cells"])
-    report["scale_cells"] = _scale_cells(False, names)
+        return rows
+    # quick-config cells (ci tier, all schemes) feed the guard baseline;
+    # the full-config cells are the paper numbers
+    quick_rows = run_bench_cells("fabric", "full",
+                                 cells=_fabric_cell_ids("ci"),
+                                 schemes=schemes)
+    full_rows = run_bench_cells("fabric", "full",
+                                cells=_fabric_cell_ids("full"),
+                                schemes=schemes)
+    report = {"config": {"note": "wall_s informational only; the matrix "
+                                 "guards gate counters/ratios "
+                                 "(DESIGN.md §13)"},
+              "quick_cells": _rows_to_cells(quick_rows),
+              "scale_cells": _rows_to_cells(full_rows)}
     if write_baseline:
         # only the direct `python -m benchmarks.bench_fabric` invocation
         # refreshes the checked-in CI baseline — the umbrella run.py
@@ -260,7 +89,7 @@ def _run_scale(out_dir: Path, quick: bool, schemes,
         print(f"[fabric --scale] wrote {BASELINE}", flush=True)
     out_dir.mkdir(parents=True, exist_ok=True)
     (out_dir / "fabric_scale.json").write_text(json.dumps(report, indent=1))
-    rows = _cells_to_rows(report["scale_cells"])
+    rows = quick_rows + full_rows
     write_csv(out_dir / "fabric_scale.csv", rows)
     return rows
 
@@ -272,22 +101,19 @@ def run(scale: str, out_dir: Path, quick: bool = False, schemes=None,
 
     # ------- legacy arch-driven cells (run.py 'fabric' suite) ----------
     topo = make_dragonfly(8, 4, 4)
-    scheme_names = [REG.resolve(s).name for s in schemes] if schemes \
-        else list(bridge.DEFAULT_SCHEMES)
+    names = scheme_names(schemes) or list(bridge.DEFAULT_SCHEMES)
     rows = []
     cells = [("granite_34b", "train", 64e6),
              ("mixtral_8x7b", "alltoall", 16e6),
              ("rwkv6_7b", "train", 28e6)]
     if quick:
         cells = cells[:1]
-    for arch, kind, default_bytes in cells:
-        del default_bytes
+    for arch, kind, _default_bytes in cells:
         # DP gradient shard per model-rank = param bytes (f32 grads) / tp
         from repro import configs as C
         shard = C.get_config(arch).active_param_count() * 4 / 16
         kind_key = "train" if kind == "train" else "alltoall"
-        rep = bridge.fabric_report(topo, kind_key, shard,
-                                   schemes=scheme_names)
+        rep = bridge.fabric_report(topo, kind_key, shard, schemes=names)
         for scheme, v in rep.items():
             rows.append({"topology": "dragonfly1056", "workload": arch,
                          "scheme": scheme, "shard_MB": round(shard / 1e6, 1),
@@ -302,7 +128,7 @@ def run(scale: str, out_dir: Path, quick: bool = False, schemes=None,
     # onto the exact simulator, whole scheme sweep as one batched program
     # (engine.run_batch; DESIGN.md §5)
     small = make_dragonfly(4, 2, 2)
-    rep = bridge.fabric_report(small, "train", 2e6, schemes=scheme_names,
+    rep = bridge.fabric_report(small, "train", 2e6, schemes=names,
                                n_chips=32, tp=4, packet_level=True)
     for scheme, v in rep.items():
         rows.append({"topology": small.name, "workload": "pkt_refine",

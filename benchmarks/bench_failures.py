@@ -1,134 +1,38 @@
 """Paper Fig. 9 / §V-D: resilience to link failures (2% of links down).
 
-Three scenario axes per topology (DESIGN.md §10):
+Three scenario axes per topology (DESIGN.md §10), all registered as
+``failures.*`` experiment-matrix cells (`repro.exp.matrix`):
 
-* ``static``  — the paper's Fig. 9 cell: links dead from t=0.
-* ``midrun``  — links fail at ``T_FAIL`` mid-traffic and recover at
-  ``T_RECOVER``: exercises Spritz's *reaction* — timeout-blocking the
-  dead EVs, falling back to the buffer, re-probing after recovery.
-* ``flap``    — a subset of links flaps periodically (the paper does not
-  evaluate this; REPS/FatPaths-style chaos axis).
+* ``static_links`` — the paper's Fig. 9 cell: links dead from t=0.
+* ``midrun_links`` — links fail mid-traffic and recover later:
+  exercises Spritz's *reaction* — timeout-blocking the dead EVs,
+  falling back to the buffer, re-probing after recovery.  The
+  ``postfail_*`` columns slice FCT over flows that completed after the
+  failure tick — the paper's 2.5-25.4x claim restated for the reaction
+  window, gated by the cells' ratio guards (Spritz vs OPS(u)).
+* ``flap_links`` — a subset of links flaps periodically (REPS /
+  FatPaths-style chaos axis; not in the paper).
 
-Baselines: only schemes able to adapt (Valiant, OPS u/w) — Minimal, ECMP,
-UGAL-L and Flicr cannot finish within the time limit in the paper; we
-include them optionally to reproduce that too.  Spritz claim: 2.5-25.4x
-speedup and up to two orders of magnitude fewer drops.  For the dynamic
-scenarios the ``postfail_*`` columns slice FCT over flows that completed
-after ``T_FAIL`` — the paper's claim restated for the reaction window.
-"""
+Baselines: the failover scheme set — Minimal, ECMP, UGAL-L and Flicr
+cannot finish within the paper's time limit there.  This module is a
+thin shim; ``--quick`` (the CI smoke of old) runs the smoke-tier
+mid-run cell with ``strict`` guard enforcement."""
 from __future__ import annotations
 
 from pathlib import Path
 
-import numpy as np
-
-from benchmarks.common import (ADAPTIVE_SCHEMES, completed_after, fct_stats,
-                               run_schemes, topologies, write_csv)
-from repro.net.sim.failures import FailureSchedule, all_links, sample_links
-from repro.net.sim.types import OPS_U, SCHEME_NAMES, SCOUT, SPRAY_U, SPRAY_W
-from repro.net.workloads import permutation
-
-SPRITZ_NAMES = (SCHEME_NAMES[SCOUT], SCHEME_NAMES[SPRAY_U],
-                SCHEME_NAMES[SPRAY_W])
-
-
-def sample_failed_links(topo, frac: float, seed: int):
-    k = max(1, int(frac * len(all_links(topo))))
-    return sample_links(topo, k, seed=seed)
-
-
-def fail_window(size_pkts: int) -> tuple[int, int]:
-    """(T_FAIL, T_RECOVER) scaled to the workload: a flow of S packets
-    injects for >= S ticks, so failing at S/2 is guaranteed mid-flight;
-    the outage spans several RTOs so senders actually react before the
-    links heal."""
-    t_fail = size_pkts // 2
-    return t_fail, t_fail + 16 * size_pkts
-
-
-def _scenarios(topo, failed, size_pkts: int, quick: bool):
-    t_fail, t_recover = fail_window(size_pkts)
-    midrun = (FailureSchedule(topo)
-              .fail_links(t_fail, failed).recover(t_recover))
-    out = {
-        "static": dict(failed_links=failed),
-        # block ~ the outage scale: long enough that a dead EV is probed a
-        # handful of times, short enough that recovery is re-discovered
-        "midrun": dict(failure_plan=midrun,
-                       block_ticks=4 * size_pkts),
-    }
-    if not quick:
-        flap = FailureSchedule(topo).flap(
-            failed[: max(1, len(failed) // 2)], period=4 * size_pkts,
-            at=t_fail, until=t_recover)
-        out["flap"] = dict(failure_plan=flap, block_ticks=2 * size_pkts)
-    return out
+from benchmarks.common import run_bench_cells, write_csv
 
 
 def run(scale: str = "small", out_dir: Path = Path("results/bench"),
-        schemes=None, quick=False, frac: float = 0.02, strict=False):
-    """``strict=True`` (the CI failover smoke) turns a post-failure FCT
-    regression vs OPS(u) into a non-zero exit instead of a log line."""
-    rows = []
-    regressions = []
-    size = 1024 if scale == "full" else 256
-    for tname, topo in topologies(scale).items():
-        if quick and tname != "dragonfly":
-            continue
-        failed = sample_failed_links(topo, frac, seed=5)
-        flows = permutation(topo, size_pkts=size, seed=6)
-        t_fail, _ = fail_window(size)
-        for scen, scen_kw in _scenarios(topo, failed, size, quick).items():
-            print(f"[failures/{tname}/{scen}] {len(failed)} links affected, "
-                  f"{len(flows)} flows")
-            got = run_schemes(topo, flows, schemes or ADAPTIVE_SCHEMES,
-                              n_ticks=1 << 18,
-                              spec_kw=dict(n_pkt_cap=1 << 17, **scen_kw))
-            # speedup vs best non-Spritz adaptive baseline
-            base = [r for r, _ in got if r["scheme"] not in SPRITZ_NAMES
-                    and r["fct_p99_us"] > 0]
-            best = min((r["fct_p99_us"] for r in base), default=-1)
-            for row, res in got:
-                row["scenario"] = scen
-                row["n_failed_links"] = len(failed)
-                row["speedup_p99_vs_best_baseline"] = (
-                    round(best / row["fct_p99_us"], 2)
-                    if best > 0 and row["fct_p99_us"] > 0 else -1)
-                if scen != "static":
-                    # reaction window: flows still running at the failure
-                    row.update(fct_stats(
-                        res, completed_after(res, flows, t_fail),
-                        prefix="postfail_"))
-                rows.append(row)
-            if scen == "midrun":
-                regressions += _report_reaction([row for row, _ in got])
+        schemes=None, quick=False, strict=False):
+    """``strict=True`` (the CI failover smoke) turns a guard breach
+    (e.g. a post-failure FCT regression vs OPS(u)) into a non-zero exit
+    instead of a log line."""
+    rows = run_bench_cells("failures", scale, schemes=schemes,
+                           quick=quick, check=strict)
     write_csv(out_dir / "failures.csv", rows)
-    if strict and regressions:
-        raise SystemExit(f"failover regression vs ops_u: {regressions}")
     return rows
-
-
-def _report_reaction(rows):
-    """Headline check for the mid-run cell: Spritz FCT beats OPS(u) over
-    flows that completed after the failure tick.  Returns the schemes
-    that fail the check (empty = all OK)."""
-    mid = {r["scheme"]: r for r in rows if r.get("scenario") == "midrun"}
-    ops = mid.get(SCHEME_NAMES[OPS_U])
-    if not ops or ops["postfail_fct_mean_us"] <= 0:
-        return []
-    bad = []
-    for name in SPRITZ_NAMES:
-        r = mid.get(name)
-        if not r or r["postfail_fct_mean_us"] <= 0:
-            continue
-        ratio = ops["postfail_fct_mean_us"] / r["postfail_fct_mean_us"]
-        verdict = "OK" if ratio > 1 else "** REGRESSION **"
-        if ratio <= 1:
-            bad.append(f"{r['topology']}/{name}")
-        print(f"    post-fail FCT {name} {r['postfail_fct_mean_us']:.1f}us "
-              f"vs ops_u {ops['postfail_fct_mean_us']:.1f}us "
-              f"-> {ratio:.2f}x {verdict}")
-    return bad
 
 
 if __name__ == "__main__":

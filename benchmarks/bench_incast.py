@@ -2,33 +2,22 @@
 
 Expectation (paper): incast p99 similar across schemes (receiver-bound);
 bystander p99 improves with Spritz (-17.9% vs best baseline) along with
-fewer retransmissions."""
+fewer retransmissions.
+
+Thin shim over the registered ``incast.*`` experiment-matrix cells
+(`repro.exp.matrix`, DESIGN.md §13); the CLI is unchanged."""
 from __future__ import annotations
 
 from pathlib import Path
 
-import numpy as np
-
-from benchmarks.common import ALL_SCHEMES, run_schemes, topologies, write_csv
-from repro.net.sim import build as B
-from repro.net.workloads import incast_bystanders
+from benchmarks.common import run_bench_cells, write_csv
 
 
 def run(scale: str = "small", out_dir: Path = Path("results/bench"),
         schemes=None, quick=False):
-    rows = []
-    n_send = 32 if scale == "full" else 8
-    size = B.mib_to_pkts(4.0 if scale == "full" else 0.25)
-    for tname, topo in topologies(scale).items():
-        if quick and tname != "dragonfly":
-            continue
-        flows, by_mask = incast_bystanders(topo, n_send, size, seed=3)
-        print(f"[incast/{tname}] {n_send} incast + {int(by_mask.sum())} bystanders")
-        got = run_schemes(topo, flows, schemes or ALL_SCHEMES,
-                          n_ticks=1 << 18,
-                          spec_kw=dict(n_pkt_cap=1 << 17), chunk=4096,
-                          masks={"incast": ~by_mask, "by": by_mask})
-        rows += [r for r, _ in got]
+    cells = ["incast.dragonfly.small"] if quick else None
+    rows = run_bench_cells("incast", scale, schemes=schemes, quick=quick,
+                           cells=cells)
     write_csv(out_dir / "incast.csv", rows)
     return rows
 

@@ -3,49 +3,21 @@
 Enumerates bounded simple paths per destination switch (sampled pairs) and
 applies the paper's 3 B/EV-entry model; reproduces the claims
 '~2.3 MiB @ <=200 paths (Dragonfly)' and '~8.5 MiB @ <=1771 paths
-(Slim Fly)' at 40k-endpoint scale by extrapolating the per-pair maxima."""
+(Slim Fly)' at 40k-endpoint scale by extrapolating the per-pair maxima.
+
+Thin shim over the registered ``memory.*`` experiment-matrix cell
+(`repro.exp.matrix`, DESIGN.md §13; model in `repro.exp.host`)."""
 from __future__ import annotations
 
 from pathlib import Path
 
-import numpy as np
-
-from benchmarks.common import write_csv
-from repro.net import paths as P
-from repro.net.topology.dragonfly import make_dragonfly
-from repro.net.topology.slimfly import make_slimfly
-
-
-def max_paths(topo, n_pairs: int = 60, seed: int = 0) -> int:
-    rng = np.random.default_rng(seed)
-    best = 0
-    for _ in range(n_pairs):
-        s, d = rng.integers(0, topo.n_switches, 2)
-        if s == d:
-            continue
-        best = max(best, len(P.enumerate_paths(topo, int(s), int(d))))
-    return best
+from benchmarks.common import run_bench_cells, write_csv
+from repro.exp.host import max_paths_per_pair as max_paths  # noqa: F401  (legacy API)
 
 
 def run(scale: str = "small", out_dir: Path = Path("results/bench"),
         **_kw):
-    rows = []
-    topos = ([make_dragonfly(4, 2, 2), make_dragonfly(6, 3, 3),
-              make_slimfly(5, p=2)] if scale != "full" else
-             [make_dragonfly(4, 2, 2), make_dragonfly(6, 3, 3),
-              make_dragonfly(8, 4, 4), make_slimfly(5), make_slimfly(9),
-              make_slimfly(13)])
-    for topo in topos:
-        mp = max_paths(topo)
-        rows.append({
-            "topology": topo.name,
-            "endpoints": topo.n_endpoints,
-            "switches": topo.n_switches,
-            "max_paths_per_pair": mp,
-            "endpoint_table_KiB":
-                round(P.endpoint_table_bytes(topo, mp) / 1024, 1),
-        })
-        print("   ", rows[-1], flush=True)
+    rows = run_bench_cells("memory", scale)
     write_csv(out_dir / "memory.csv", rows)
     return rows
 

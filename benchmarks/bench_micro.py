@@ -1,30 +1,18 @@
 """Paper Fig. 6: permutation + adversarial microbenchmarks — FCT
-distribution, packet drops (trims), and out-of-order percentage."""
+distribution, packet drops (trims), and out-of-order percentage.
+
+Thin shim over the registered ``micro.*`` experiment-matrix cells
+(`repro.exp.matrix`, DESIGN.md §13); the CLI is unchanged."""
 from __future__ import annotations
 
 from pathlib import Path
 
-from benchmarks.common import ALL_SCHEMES, run_schemes, topologies, write_csv
-from repro.net.workloads import adversarial, permutation
+from benchmarks.common import run_bench_cells, write_csv
 
 
 def run(scale: str = "small", out_dir: Path = Path("results/bench"),
-        schemes=None, size_pkts=None, quick=False):
-    rows = []
-    size = size_pkts or (1024 if scale == "full" else 512)
-    for tname, topo in topologies(scale).items():
-        for wname, gen in (("permutation", permutation),
-                           ("adversarial", adversarial)):
-            if quick and (tname, wname) != ("dragonfly", "adversarial"):
-                continue
-            flows = gen(topo, size_pkts=size, seed=1)
-            print(f"[micro/{tname}/{wname}] {len(flows)} flows x {size} pkts")
-            got = run_schemes(topo, flows, schemes or ALL_SCHEMES,
-                              n_ticks=1 << 17,
-                              spec_kw=dict(n_pkt_cap=1 << 17))
-            for row, _ in got:
-                row["workload"] = wname
-                rows.append(row)
+        schemes=None, quick=False):
+    rows = run_bench_cells("micro", scale, schemes=schemes, quick=quick)
     write_csv(out_dir / "micro.csv", rows)
     return rows
 

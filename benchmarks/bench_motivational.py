@@ -1,52 +1,34 @@
 """Paper Table III / Fig. 5: monitored 4 MiB flow discovering free groups.
 
-Reports solo FCT, per-scheme loaded FCT, and speedup vs UGAL-L.  At --full
-this reproduces the paper's headline (our run: ECMP 561 us vs paper 502;
-UGAL-L 168 vs 199; Spray ~96 -> 1.75x speedup vs paper's 1.6-1.8x)."""
+Reports the per-scheme loaded FCT of the monitored flow (``mon_*``
+columns) and the speedup vs UGAL-L.  At --full this reproduces the
+paper's headline (our run: ECMP 561 us vs paper 502; UGAL-L 168 vs 199;
+Spray ~96 -> 1.75x speedup vs paper's 1.6-1.8x).
+
+Thin shim over the registered ``motivational.*`` experiment-matrix
+cells (`repro.exp.matrix`, DESIGN.md §13); the CLI is unchanged."""
 from __future__ import annotations
 
 from pathlib import Path
 
-import numpy as np
-
-from benchmarks.common import ALL_SCHEMES, run_schemes, topologies, write_csv
-from repro.net.sim import build as B
-from repro.net.sim import engine as E
-from repro.net.sim.types import MINIMAL, SCHEME_NAMES, UGAL_L
-from repro.net.workloads import motivational
+from benchmarks.common import run_bench_cells, write_csv
 
 
 def run(scale: str = "small", out_dir: Path = Path("results/bench"),
         schemes=None, quick=False):
-    rows = []
-    # the paper monitors a 4 MiB flow at every scale: smaller flows fit
-    # inside cwnd_init (1.5 BDP) and never exercise the CC/LB dynamics
-    mon_mib = 4.0
-    for tname, topo in topologies(scale).items():
-        if quick and tname == "slimfly":
-            continue
-        mon = B.mib_to_pkts(mon_mib)
-        solo_flows, mi = motivational(topo, mon, 0, solo=True)
-        spec = B.build_spec(topo, solo_flows, MINIMAL, n_ticks=1 << 16)
-        solo = E.run(spec, stop_flows=np.array([mi]))
-        solo_us = float(B.ticks_to_us(solo.fct_ticks[mi]))
-        print(f"[motivational/{tname}] solo FCT {solo_us:.0f} us")
-
-        flows, mi = motivational(
-            topo, mon, bg_pkts=1 << 14, n_free_groups=2,
-            bg_flows_per_ep=5, warmup_ticks=1024)
-        got = run_schemes(topo, flows, schemes or ALL_SCHEMES,
-                          n_ticks=1 << 17, stop_flows=np.array([mi]),
-                          spec_kw=dict(n_pkt_cap=1 << 17), chunk=4096,
-                          masks={"mon": np.arange(len(flows)) == mi})
-        ug = next((r for r, _ in got if r["scheme"] == SCHEME_NAMES[UGAL_L]),
-                  None)
-        for row, _res in got:
-            row["solo_us"] = solo_us
-            row["speedup_vs_ugal"] = (
-                round(ug["mon_fct_mean_us"] / row["mon_fct_mean_us"], 2)
-                if ug and row["mon_fct_mean_us"] > 0 else -1)
-            rows.append(row)
+    cells = ["motivational.dragonfly.small"] if quick else None
+    rows = run_bench_cells("motivational", scale, schemes=schemes,
+                           quick=quick, cells=cells)
+    # per-cell speedup vs the UGAL-L lane, the paper's baseline column
+    by_cell: dict[str, dict] = {}
+    for r in rows:
+        if r.get("scheme") == "ugal_l" and r.get("mon_fct_mean_us", -1) > 0:
+            by_cell[r["cell_id"]] = r
+    for r in rows:
+        ug = by_cell.get(r["cell_id"])
+        r["speedup_vs_ugal"] = (
+            round(ug["mon_fct_mean_us"] / r["mon_fct_mean_us"], 2)
+            if ug and r.get("mon_fct_mean_us", -1) > 0 else -1)
     write_csv(out_dir / "motivational.csv", rows)
     return rows
 

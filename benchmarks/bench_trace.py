@@ -2,31 +2,22 @@
 
 Paper observation reproduced here: spraying schemes can lose to minimal /
 UGAL-L on this uniform tiny-flow workload (source-based schemes are
-reactive); Spritz keeps the lowest drop counts."""
+reactive); Spritz keeps the lowest drop counts.
+
+Thin shim over the registered ``trace.*`` experiment-matrix cells
+(`repro.exp.matrix`, DESIGN.md §13); the CLI is unchanged."""
 from __future__ import annotations
 
 from pathlib import Path
 
-from benchmarks.common import ALL_SCHEMES, run_schemes, topologies, write_csv
-from repro.net.topology.base import TICK_NS
-from repro.net.workloads import websearch
+from benchmarks.common import run_bench_cells, write_csv
 
 
 def run(scale: str = "small", out_dir: Path = Path("results/bench"),
         schemes=None, quick=False):
-    rows = []
-    dur_us = 1000.0 if scale == "full" else 100.0
-    ticks = int(dur_us * 1000 / TICK_NS)
-    for tname, topo in topologies(scale).items():
-        if quick and tname != "dragonfly":
-            continue
-        flows = websearch(topo, ticks, load=1.0, seed=4,
-                          max_flows=4000 if scale != "full" else 20000)
-        print(f"[trace/{tname}] {len(flows)} websearch flows over {dur_us}us")
-        got = run_schemes(topo, flows, schemes or ALL_SCHEMES,
-                          n_ticks=8 * ticks,
-                          spec_kw=dict(n_pkt_cap=1 << 16), chunk=4096)
-        rows += [r for r, _ in got]
+    cells = ["trace.dragonfly.small"] if quick else None
+    rows = run_bench_cells("trace", scale, schemes=schemes, quick=quick,
+                           cells=cells)
     write_csv(out_dir / "trace.csv", rows)
     return rows
 

@@ -1,10 +1,11 @@
-"""Shared benchmark harness: scheme sets, topology scales, CSV output.
+"""Shared benchmark dispatch + helpers.
 
-Every ``bench_*`` module maps to one paper table/figure (DESIGN.md §8) and
-registers a ``run(scale, out_dir)`` entry.  ``--full`` uses the paper-scale
-topologies (DF 1056 / SF 1134 endpoints) — slow on this 1-core container;
-the default reduced scale preserves scheme *orderings* (EXPERIMENTS.md
-reports which scale produced each number).
+The cell-running machinery lives in the experiment-matrix subsystem
+(`repro.exp`, DESIGN.md §13); every ``bench_*`` module is a thin shim
+over registered matrix cells.  This module keeps the shared CLI
+(``bench_cli``), the scheme-set tables, CSV/JSON writers, and
+re-exports the packet-cell statistics helpers (``run_schemes``,
+``fct_stats``, ``completed_after``) for callers of the legacy API.
 """
 from __future__ import annotations
 
@@ -12,17 +13,12 @@ import argparse
 import csv
 import inspect
 import json
-import time
 from pathlib import Path
 
-import numpy as np
-
+from repro.exp.packet import (completed_after, fct_stats,  # noqa: F401
+                              run_schemes)
+from repro.exp.workloads import make_topology
 from repro.net.policies import registry as REG
-from repro.net.sim import build as B
-from repro.net.sim import engine as E
-from repro.net.sim.types import SCHEME_NAMES, SPRAY_W
-from repro.net.topology.dragonfly import make_dragonfly
-from repro.net.topology.slimfly import make_slimfly
 
 # scheme sets come from the sender-policy registry (DESIGN.md §11): every
 # registered scheme benchmarks by default; ``failover`` flags the schemes
@@ -32,7 +28,7 @@ ALL_SCHEMES = [p.code for p in REG.all_policies()]
 ADAPTIVE_SCHEMES = [p.code for p in REG.failover_policies()]
 
 
-def scheme_codes(arg) -> list[int]:
+def scheme_codes(arg) -> list[int] | None:
     """Shared ``--schemes`` filter: a comma-separated string (or iterable)
     of registry names — integer codes accepted as a deprecation shim."""
     if arg is None:
@@ -41,6 +37,14 @@ def scheme_codes(arg) -> list[int]:
         arg = [s for s in arg.split(",") if s]
     return [REG.as_code(int(s) if isinstance(s, str) and s.isdigit() else s)
             for s in arg]
+
+
+def scheme_names(arg) -> list[str] | None:
+    """Same filter, resolved to registry names (what `repro.exp` takes)."""
+    codes = scheme_codes(arg)
+    if codes is None:
+        return None
+    return [REG.resolve(c).name for c in codes]
 
 
 def bench_cli(run, argv=None, **fixed):
@@ -70,77 +74,37 @@ def bench_cli(run, argv=None, **fixed):
     return run(scale, Path(args.out), **kw)
 
 
-def topologies(scale: str):
-    if scale == "full":
-        return {"dragonfly": make_dragonfly(8, 4, 4),
-                "slimfly": make_slimfly(9)}
-    if scale == "mid":
-        return {"dragonfly": make_dragonfly(6, 3, 3),
-                "slimfly": make_slimfly(5, p=3)}
-    return {"dragonfly": make_dragonfly(4, 2, 2),
-            "slimfly": make_slimfly(5, p=2)}
-
-
-def fct_stats(res, mask=None, prefix=""):
-    sel = np.ones(len(res.fct_ticks), bool) if mask is None else mask
-    fct = B.ticks_to_us(res.fct_ticks[sel])
-    done = res.done[sel]
-    out = {
-        f"{prefix}done_frac": float(done.mean()) if sel.any() else -1,
-        f"{prefix}fct_mean_us": float(fct[done].mean()) if done.any() else -1,
-        f"{prefix}fct_p50_us": float(np.percentile(fct[done], 50)) if done.any() else -1,
-        f"{prefix}fct_p99_us": float(np.percentile(fct[done], 99)) if done.any() else -1,
-        f"{prefix}trims": int(res.trims[sel].sum()),
-        f"{prefix}timeouts": int(res.timeouts[sel].sum()),
-        f"{prefix}retx": int(res.retx[sel].sum()),
-        f"{prefix}ooo_pct": float(100 * res.ooo[sel].sum()
-                                  / max(res.delivered[sel].sum(), 1)),
-    }
-    return out
-
-
-def completed_after(res, flows, tick):
-    """Mask of flows whose completion tick lies after virtual ``tick`` —
-    feed to ``fct_stats(res, mask)`` for post-failure FCT slices.  A flow
-    that never finished counts as 'after' (it was still running)."""
-    start = np.asarray([f.start_tick for f in flows])
-    return ~res.done | (start + res.fct_ticks > tick)
-
-
-def run_schemes(topo, flows, schemes, *, n_ticks, seed=0, stop_flows=None,
-                masks=None, spec_kw=None, chunk=None, verbose=True):
-    """Run every scheme over one flow set as ONE batched device program.
-
-    The spec (paths, ports, latencies) is built once with a weighted base
-    scheme; per-scheme lanes derive their weights/static paths inside
-    ``engine.run_batch`` and the whole scheme sweep compiles once and runs
-    as a single vmapped while_loop (DESIGN.md §5).  ``chunk`` is accepted
-    for backwards compatibility and ignored.
-    """
-    del chunk
-    base = B.build_spec(topo, flows, SPRAY_W, n_ticks=n_ticks, seed=seed,
-                        **(spec_kw or {}))
-    t0 = time.time()
-    results = E.run_batch(base, schemes=list(schemes), seeds=[seed],
-                          stop_flows=stop_flows)
-    wall = time.time() - t0
-    rows = []
-    for scheme, res in zip(schemes, results):
-        row = {"topology": topo.name, "scheme": SCHEME_NAMES[scheme],
-               "wall_s": round(wall / max(len(results), 1), 1),
-               "steps": res.steps_executed,
-               "compression": round(res.compression, 2)}
-        if masks:
-            for name, m in masks.items():
-                row.update(fct_stats(res, m, prefix=f"{name}_"))
+def run_bench_cells(bench: str, scale: str, schemes=None, quick=False,
+                    check=False, cells=None) -> list[dict]:
+    """The bench-shim dispatcher: select the bench's registered matrix
+    cells for the requested scale (``quick`` → the smoke-tier cells),
+    run them through `repro.exp.runner`, and return flat legacy-style
+    rows.  ``check=True`` turns any guard breach into ``SystemExit``."""
+    from repro.exp import matrix, runner
+    if cells is None:
+        if quick:
+            sel = matrix.cells(tier="smoke", bench=bench) \
+                or matrix.cells(tier="ci", bench=bench)
+            scale_override = None
+        elif scale == "full":
+            sel = matrix.cells(tier="full", bench=bench)
+            scale_override = None
         else:
-            row.update(fct_stats(res))
-        rows.append((row, res))
-        if verbose:
-            print("   ", {k: v for k, v in row.items()
-                          if not isinstance(v, float) or abs(v) < 1e7},
-                  flush=True)
-    return rows
+            sel = matrix.cells(tier="ci", bench=bench)
+            scale_override = scale if scale != "small" else None
+        cells = [c.cell_id for c in sel]
+    else:
+        scale_override = None
+    summary = runner.run(cells=cells, schemes=scheme_names(schemes),
+                         scale=scale_override, results_md=None,
+                         check=check)
+    return summary.rows
+
+
+def topologies(scale: str):
+    """Legacy helper: the matrix's packet topology pair at one scale."""
+    return {name: make_topology(name, scale)
+            for name in ("dragonfly", "slimfly")}
 
 
 def write_csv(path: Path, rows: list[dict]):

@@ -1,15 +1,28 @@
 """Benchmark orchestrator: one function per paper table/figure + LM-side
 kernel microbenches.  Prints ``name,us_per_call,derived`` CSV lines.
 
+Every suite is a thin shim over registered experiment-matrix cells
+(`repro.exp`, DESIGN.md §13) — ``python -m repro.exp run`` is the
+primary entry point; this CLI is kept for the legacy sweep format.
+
   PYTHONPATH=src python -m benchmarks.run            # quick suite (~minutes)
   PYTHONPATH=src python -m benchmarks.run --scale small   # all benches, reduced
   PYTHONPATH=src python -m benchmarks.run --scale full    # paper-scale (slow)
+
+``--only`` takes a comma list validated against the suite table; an
+unknown name exits non-zero (a typo'd CI step must not pass vacuously),
+and any suite failure propagates into the exit code.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
+import traceback
 from pathlib import Path
+
+SUITE_NAMES = ("memory", "engine", "motivational", "micro", "collectives",
+               "incast", "trace", "failures", "fabric")
 
 
 def _kernel_bench():
@@ -55,8 +68,7 @@ def main() -> None:
     ap.add_argument("--scale", default="quick",
                     choices=["quick", "small", "mid", "full"])
     ap.add_argument("--only", default=None,
-                    help="comma list: motivational,micro,collectives,"
-                         "incast,trace,failures,memory,kernels,engine")
+                    help="comma list: " + ",".join(SUITE_NAMES) + ",kernels")
     ap.add_argument("--schemes", default=None,
                     help="comma-separated registry scheme names forwarded "
                          "to every suite that takes a scheme set")
@@ -90,29 +102,53 @@ def main() -> None:
         "failures": lambda: call(bench_failures.run, quick=quick),
         "fabric": lambda: call(bench_fabric.run, quick=quick),
     }
-    only = set(args.only.split(",")) if args.only else None
+    assert set(suites) == set(SUITE_NAMES)
 
+    only = None
+    if args.only is not None:
+        only = {s for s in args.only.split(",") if s}
+        unknown = only - set(SUITE_NAMES) - {"kernels"}
+        if unknown or not only:
+            # a typo'd or empty --only must not skip every suite and
+            # exit 0 — that makes a CI step pass vacuously
+            sys.exit(("unknown --only suite(s): "
+                      f"{sorted(unknown)}; " if unknown
+                      else "empty --only selection; ")
+                     + f"known: {','.join(SUITE_NAMES)},kernels")
+
+    failed: list[str] = []
     print("name,us_per_call,derived")
-    for name, us, derived in _kernel_bench():
-        if only is None or "kernels" in only:
-            print(f"{name},{us:.1f},{derived}")
+    if only is None or "kernels" in only:
+        try:
+            for name, us, derived in _kernel_bench():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            traceback.print_exc()
+            failed.append("kernels")
     for name, fn in suites.items():
         if only is not None and name not in only:
             continue
         t0 = time.time()
-        rows = fn()
-        # emit one summary CSV line per (topology x scheme) mean FCT
+        try:
+            rows = fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+            continue
+        # emit one summary CSV line per (topology x scheme) key metric
         for r in rows:
             key_metric = next((r[k] for k in
                                ("mon_fct_mean_us", "coll_duration_us",
                                 "by_fct_p99_us", "fct_p99_us", "fct_mean_us",
-                                "endpoint_table_KiB") if k in r and r[k] != -1),
-                              "")
+                                "fct_us", "endpoint_table_KiB")
+                               if k in r and r[k] != -1), "")
             print(f"bench_{name}_{r.get('topology','-')}_"
                   f"{r.get('scheme', r.get('workload','-'))},"
                   f"{key_metric},{r.get('trims', r.get('max_paths_per_pair',''))}",
                   flush=True)
         print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+    if failed:
+        sys.exit(f"suite failure(s): {','.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,6 @@ DESIGN.md §4).
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 
 ARCHS = [

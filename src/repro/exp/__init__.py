@@ -1,0 +1,14 @@
+"""Declarative experiment-matrix subsystem (DESIGN.md §13).
+
+One matrix (:mod:`repro.exp.matrix`) enumerates the paper's
+figure/table cells as data across tiers ``smoke`` / ``ci`` / ``full``;
+one runner (``python -m repro.exp run --tier ci``) dispatches them
+through the registry-unified packet engine (``engine.run_batch``) and
+flow engine (``flowsim.simulate_batch``), caches per-cell JSON results
+by content hash, and gates paper-target checks expressed only as
+ratios and counters.  The legacy ``benchmarks/bench_*`` CLIs are thin
+shims over registered cells.
+"""
+from repro.exp.spec import Cell, ENGINES, TIERS, validate_result
+
+__all__ = ["Cell", "ENGINES", "TIERS", "validate_result"]

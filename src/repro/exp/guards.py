@@ -1,0 +1,181 @@
+"""Guard evaluation for experiment cells (DESIGN.md §13).
+
+Guards turn a cell's metric rows into pass/fail verdicts expressed
+**only as ratios and counters** — never absolute wall time.  Kinds:
+
+* ``counter`` — bound one metric per row: ``{"kind": "counter",
+  "metric": "down_violations", "op": "==", "value": 0}`` (optionally
+  scoped to one ``scheme``; a metric prefix like ``postfail_`` is part
+  of the metric name).
+* ``ratio`` — seed-averaged metric of scheme ``num`` over scheme
+  ``den`` within the same cell: ``{"kind": "ratio", "metric":
+  "fct_mean_us", "num": "spritz_spray_w", "den": "ecmp", "op": "<=",
+  "value": 1.0}``.
+* ``baseline`` — one scalar from a checked-in repo-root baseline JSON
+  (``file`` + dotted ``path``) vs the row metric, within relative
+  ``tol``; ``dir`` picks the failing direction ("max": value may not
+  exceed base*(1+tol), "min": may not fall below base*(1-tol)).
+* ``baseline_schemes`` — a per-scheme map in the baseline JSON
+  (``path`` ends at a ``schemes`` dict): every scheme actually run is
+  compared on ``metric`` within relative ``tol`` (or absolute
+  ``abs_tol``); schemes absent from the baseline are skipped, so a
+  narrowed ``--schemes`` run guards only what it ran.
+"""
+from __future__ import annotations
+
+import json
+import operator
+from pathlib import Path
+
+from repro.exp.hashing import repo_root
+
+_OPS = {"==": operator.eq, "<=": operator.le, ">=": operator.ge,
+        "<": operator.lt, ">": operator.gt}
+
+
+def _mean_metric(rows, scheme, metric):
+    vals = [r[metric] for r in rows
+            if r.get("scheme") == scheme and metric in r
+            and isinstance(r[metric], (int, float)) and r[metric] >= 0]
+    return sum(vals) / len(vals) if vals else None
+
+
+def _load_baseline(file: str, path: str):
+    p = Path(repo_root()) / file
+    if not p.is_file():
+        return None, f"baseline file {file} missing"
+    obj = json.loads(p.read_text())
+    for key in path.split("."):
+        if not isinstance(obj, dict) or key not in obj:
+            return None, f"baseline path {path} missing in {file}"
+        obj = obj[key]
+    return obj, None
+
+
+def _eval_counter(g, rows):
+    op = _OPS[g.get("op", "==")]
+    bound = g["value"]
+    metric = g["metric"]
+    if g.get("scheme") and not _ran(rows, g["scheme"]):
+        return dict(ok=True, value=None,
+                    note=f"skipped: {g['scheme']} not in this run")
+    sel = [r for r in rows
+           if metric in r and (g.get("scheme") is None
+                               or r.get("scheme") == g["scheme"])]
+    if not sel:
+        return dict(ok=False, value=None,
+                    note=f"no rows carry metric {metric!r}")
+    bad = [r for r in sel if not op(r[metric], bound)]
+    worst = (max if g.get("op", "==") in ("<=", "<", "==") else min)(
+        (r[metric] for r in sel))
+    return dict(ok=not bad, value=worst,
+                note=(f"{len(bad)}/{len(sel)} rows breach"
+                      if bad else f"{len(sel)} rows OK"))
+
+
+def _ran(rows, scheme):
+    return any(r.get("scheme") == scheme for r in rows)
+
+
+def _eval_ratio(g, rows):
+    # a narrowed --schemes run guards only what it ran: a ratio whose
+    # endpoint scheme was not part of this invocation is skipped, not
+    # failed (the registered cell still enforces it on full CI runs)
+    skipped = [s for s in (g["num"], g["den"]) if not _ran(rows, s)]
+    if skipped:
+        return dict(ok=True, value=None,
+                    note=f"skipped: {','.join(skipped)} not in this run")
+    num = _mean_metric(rows, g["num"], g["metric"])
+    den = _mean_metric(rows, g["den"], g["metric"])
+    if num is None or den is None or den == 0:
+        return dict(ok=False, value=None,
+                    note=f"missing {g['metric']} for "
+                         f"{g['num'] if num is None else g['den']}")
+    ratio = num / den
+    return dict(ok=bool(_OPS[g.get("op", "<=")](ratio, g["value"])),
+                value=round(ratio, 4))
+
+
+def _within(cur, base, tol):
+    if base == 0:
+        return cur == 0
+    return abs(cur - base) <= tol * abs(base)
+
+
+def _eval_baseline(g, rows):
+    if g.get("scheme") and not _ran(rows, g["scheme"]):
+        return dict(ok=True, value=None,
+                    note=f"skipped: {g['scheme']} not in this run")
+    base, err = _load_baseline(g["file"], g["path"])
+    if err:
+        return dict(ok=False, value=None, note=err)
+    val = _mean_metric(rows, g.get("scheme"), g["metric"]) \
+        if g.get("scheme") else _mean_metric(
+            rows, rows[0].get("scheme") if rows else None, g["metric"])
+    if val is None:
+        return dict(ok=False, value=None,
+                    note=f"metric {g['metric']!r} missing")
+    tol = g.get("tol", 0.25)
+    if g.get("dir", "max") == "max":
+        ok = val <= base * (1 + tol)
+    else:
+        ok = val >= base * (1 - tol)
+    return dict(ok=bool(ok), value=val,
+                note=f"baseline {base} ±{tol:.0%} ({g.get('dir', 'max')})")
+
+
+def _eval_baseline_schemes(g, rows):
+    base, err = _load_baseline(g["file"], g["path"])
+    if err:
+        return dict(ok=False, value=None, note=err)
+    metric, tol, abs_tol = g["metric"], g.get("tol"), g.get("abs_tol")
+    bad, checked = [], 0
+    for scheme, bcell in base.items():
+        if metric not in bcell:
+            continue
+        val = _mean_metric(rows, scheme, metric)
+        if val is None:
+            continue                      # scheme not run this invocation
+        checked += 1
+        b = bcell[metric]
+        ok = (abs(val - b) <= abs_tol) if abs_tol is not None \
+            else _within(val, b, tol if tol is not None else 0.25)
+        if not ok:
+            bad.append(f"{scheme}:{val} vs {b}")
+    if checked == 0:
+        # all overlap between run schemes and the baseline map is gone
+        # (e.g. a --schemes run without ecmp emits no ratio column):
+        # skip — the registered cell still enforces this on full runs
+        return dict(ok=True, value=0,
+                    note=f"skipped: no run scheme carries {metric!r} to "
+                         f"compare against {g['path']}")
+    return dict(ok=not bad, value=checked,
+                note="; ".join(bad) if bad else f"{checked} schemes OK")
+
+
+_EVAL = {"counter": _eval_counter, "ratio": _eval_ratio,
+         "baseline": _eval_baseline,
+         "baseline_schemes": _eval_baseline_schemes}
+
+
+def describe(g: dict) -> str:
+    kind = g["kind"]
+    if kind == "counter":
+        scope = f"[{g['scheme']}]" if g.get("scheme") else "[*]"
+        return f"{scope} {g['metric']} {g.get('op', '==')} {g['value']}"
+    if kind == "ratio":
+        return (f"{g['metric']} {g['num']}/{g['den']} "
+                f"{g.get('op', '<=')} {g['value']}")
+    if kind == "baseline":
+        return f"{g['metric']} vs {g['file']}:{g['path']}"
+    return f"{g['metric']} per-scheme vs {g['file']}:{g['path']}"
+
+
+def evaluate(guards, rows) -> list[dict]:
+    """Evaluate every guard over the cell's metric rows; returns
+    normalized verdict dicts (``desc``/``ok``/``value``/``note``)."""
+    out = []
+    for g in guards:
+        verdict = _EVAL[g["kind"]](dict(g), rows)
+        out.append(dict(desc=describe(dict(g)), kind=g["kind"], **verdict))
+    return out

@@ -1,0 +1,318 @@
+"""THE experiment matrix (DESIGN.md §13): every paper figure/table cell
+as data, across tiers ``smoke`` / ``ci`` / ``full``.
+
+* ``smoke`` — the per-PR CI gate: a handful of minutes-scale cells
+  spanning both engines, both topologies and a mid-run failure plan,
+  with hard ratio/counter guards (the old four ad-hoc bench smoke
+  steps).
+* ``ci`` — the nightly matrix: every figure at reduced scale, all
+  registered schemes, both topologies, guarded against the checked-in
+  baselines.
+* ``full`` — the paper-scale reproduction (slow; refreshes the numbers
+  EXPERIMENTS.md reports).
+
+Adding the next scenario = appending one :class:`~repro.exp.spec.Cell`
+here; it automatically joins ``python -m repro.exp run``, the nightly
+workflow, RESULTS.md and the tier-enumeration tests.
+"""
+from __future__ import annotations
+
+from repro.exp.spec import Cell
+
+# registry scheme-name shorthands (validated against the policy registry
+# by tests/test_exp.py — the matrix itself must import without jax).
+SPRITZ_W = "spritz_spray_w"
+FAILOVER_SCHEMES = ("valiant", "ops_u", "ops_w", "spritz_scout",
+                    "spritz_spray_u", SPRITZ_W, "reps")
+SMOKE_SCHEMES = ("ecmp", "ugal_l", "ops_u", SPRITZ_W, "reps")
+FLOW_SMOKE_SCHEMES = ("ecmp", "ops_u", SPRITZ_W)
+
+_G_NO_DOWN = {"kind": "counter", "metric": "down_violations",
+              "op": "==", "value": 0}
+
+
+def _g_counter(metric, op, value, scheme=None):
+    g = {"kind": "counter", "metric": metric, "op": op, "value": value}
+    if scheme:
+        g["scheme"] = scheme
+    return g
+
+
+def _g_ratio(metric, num, den, value, op="<="):
+    return {"kind": "ratio", "metric": metric, "num": num, "den": den,
+            "op": op, "value": value}
+
+
+def _g_fabric_baseline(topo, cell, metric, **kw):
+    return {"kind": "baseline_schemes", "file": "BENCH_fabric.json",
+            "path": f"quick_cells.{topo}.{cell}.schemes",
+            "metric": metric, **kw}
+
+
+def _cells() -> list[Cell]:
+    cells: list[Cell] = []
+
+    # ---------------------------------------------------- smoke tier
+    cells += [
+        Cell(
+            cell_id="micro.dragonfly.adversarial.smoke",
+            figure="fig6", bench="micro", engine="packet",
+            topology="dragonfly", scale="small", workload="adversarial",
+            workload_kw={"size_pkts": 512, "seed": 1},
+            schemes=SMOKE_SCHEMES, n_ticks=1 << 17,
+            spec_kw={"n_pkt_cap": 1 << 17}, tiers=("smoke",),
+            guards=(_G_NO_DOWN,
+                    _g_counter("done_frac", ">=", 0.99),
+                    _g_ratio("fct_mean_us", SPRITZ_W, "ecmp", 1.0)),
+        ),
+        Cell(
+            cell_id="failures.dragonfly.midrun.smoke",
+            figure="fig9", bench="failures", engine="packet",
+            topology="dragonfly", scale="small", workload="permutation",
+            workload_kw={"size_pkts": 256, "seed": 6},
+            schemes=FAILOVER_SCHEMES,
+            failure="midrun_links", failure_kw={"frac": 0.02, "seed": 5},
+            n_ticks=1 << 18, spec_kw={"n_pkt_cap": 1 << 17},
+            tiers=("smoke",),
+            guards=(_G_NO_DOWN,
+                    _g_ratio("postfail_fct_mean_us", "spritz_scout",
+                             "ops_u", 1.0),
+                    _g_ratio("postfail_fct_mean_us", "spritz_spray_u",
+                             "ops_u", 1.0),
+                    _g_ratio("postfail_fct_mean_us", SPRITZ_W,
+                             "ops_u", 1.0)),
+        ),
+        Cell(
+            cell_id="collectives.slimfly.alltoall.smoke",
+            figure="fig7", bench="collectives", engine="packet",
+            topology="slimfly", scale="small", workload="collective",
+            workload_kw={"kind": "alltoall", "m": 16, "total_mib": 1.0,
+                         "bg_pkts": 256, "seed": 2},
+            schemes=("ecmp", "ugal_l", "ops_w", SPRITZ_W),
+            n_ticks=1 << 18, spec_kw={"n_pkt_cap": 1 << 17},
+            tiers=("smoke",),
+            guards=(_G_NO_DOWN,
+                    _g_counter("coll_done_frac", ">=", 0.99)),
+        ),
+        # the BENCH_engine.json guard as a matrix cell: the horizon
+        # driver's compression on the deterministic dead-time probe —
+        # steps_executed is exact, so any decay fires the baseline guard
+        Cell(
+            cell_id="engine.dragonfly.probe.smoke",
+            figure="engine_perf", bench="engine", engine="packet",
+            topology="dragonfly", scale="small", workload="probe",
+            workload_kw={}, schemes=("ecmp",), n_ticks=1 << 13,
+            tiers=("smoke", "ci"),
+            guards=(_g_counter("compression", ">=", 8.0),
+                    {"kind": "baseline", "file": "BENCH_engine.json",
+                     "path": "compression_probe.steps_executed",
+                     "metric": "steps", "scheme": "ecmp",
+                     "tol": 0.25, "dir": "max"}),
+        ),
+    ]
+    # flow-level smoke: the BENCH_fabric.json guard cells (quick configs)
+    cells += [
+        Cell(
+            cell_id="fabric.dragonfly1056.train.smoke",
+            figure="fabric_scale", bench="fabric", engine="flow",
+            topology="dragonfly1056", scale="quick", workload="train",
+            workload_kw={"n_chips": 256, "tp": 16, "shard": 4e6},
+            schemes=FLOW_SMOKE_SCHEMES, tiers=("smoke",),
+            guards=(_g_fabric_baseline("dragonfly1056", "train",
+                                       "done_frac", abs_tol=0.02),
+                    _g_fabric_baseline("dragonfly1056", "train",
+                                       "fct_ratio_vs_ecmp", tol=0.25),
+                    _g_ratio("fct_us", SPRITZ_W, "ecmp", 0.7)),
+        ),
+        Cell(
+            cell_id="fabric.slimfly1134.alltoall.smoke",
+            figure="fabric_scale", bench="fabric", engine="flow",
+            topology="slimfly1134", scale="quick", workload="alltoall",
+            workload_kw={"n_chips": 128, "tp": 16, "shard": 2e6},
+            schemes=FLOW_SMOKE_SCHEMES, tiers=("smoke",),
+            guards=(_g_fabric_baseline("slimfly1134", "alltoall",
+                                       "done_frac", abs_tol=0.02),
+                    _g_fabric_baseline("slimfly1134", "alltoall",
+                                       "fct_ratio_vs_ecmp", tol=0.25),
+                    _g_ratio("fct_us", SPRITZ_W, "ecmp", 0.85)),
+        ),
+        Cell(
+            cell_id="fabric.dragonfly1056.midrun.smoke",
+            figure="fabric_scale", bench="fabric", engine="flow",
+            topology="dragonfly1056", scale="quick", workload="train",
+            workload_kw={"n_chips": 256, "tp": 16, "shard": 4e6},
+            failure="loaded_midrun",
+            failure_kw={"n_links": 8, "fail_at_frac": 4,
+                        "recover_mult": 16},
+            schemes=FLOW_SMOKE_SCHEMES, tiers=("smoke",),
+            guards=(_g_fabric_baseline("dragonfly1056", "midrun_failure",
+                                       "done_frac", abs_tol=0.02),
+                    _g_fabric_baseline("dragonfly1056", "midrun_failure",
+                                       "fct_ratio_vs_ecmp", tol=0.25),
+                    _g_counter("forced", ">=", 1, scheme=SPRITZ_W),
+                    _g_ratio("fct_us", SPRITZ_W, "ecmp", 0.5)),
+        ),
+    ]
+
+    # ------------------------------------------- ci tier (nightly) +
+    # ------------------------------------------- full tier (paper scale)
+    for topo in ("dragonfly", "slimfly"):
+        for wname in ("permutation", "adversarial"):
+            for scale, size, tiers in (("small", 512, ("ci",)),
+                                       ("full", 1024, ("full",))):
+                cells.append(Cell(
+                    cell_id=f"micro.{topo}.{wname}.{scale}",
+                    figure="fig6", bench="micro", engine="packet",
+                    topology=topo, scale=scale, workload=wname,
+                    workload_kw={"size_pkts": size, "seed": 1},
+                    n_ticks=1 << 17, spec_kw={"n_pkt_cap": 1 << 17},
+                    tiers=tiers, guards=(_G_NO_DOWN,)))
+        for scale, tiers in (("small", ("ci",)), ("full", ("full",))):
+            cells.append(Cell(
+                cell_id=f"motivational.{topo}.{scale}",
+                figure="table3_fig5", bench="motivational",
+                engine="packet", topology=topo, scale=scale,
+                workload="motivational", workload_kw={"mon_mib": 4.0},
+                n_ticks=1 << 17, spec_kw={"n_pkt_cap": 1 << 17},
+                tiers=tiers,
+                guards=(_G_NO_DOWN,
+                        _g_ratio("mon_fct_mean_us", SPRITZ_W,
+                                 "ugal_l", 1.1))))
+            for kind in ("allreduce_ring", "allreduce_butterfly",
+                         "alltoall"):
+                full = scale == "full"
+                cells.append(Cell(
+                    cell_id=f"collectives.{topo}.{kind}.{scale}",
+                    figure="fig7", bench="collectives", engine="packet",
+                    topology=topo, scale=scale, workload="collective",
+                    workload_kw={"kind": kind, "m": 128 if full else 16,
+                                 "total_mib": 8.0 if full else 1.0,
+                                 "bg_pkts": 1024 if full else 256,
+                                 "seed": 2},
+                    n_ticks=1 << 18, spec_kw={"n_pkt_cap": 1 << 17},
+                    tiers=tiers,
+                    guards=(_G_NO_DOWN,
+                            _g_counter("coll_done_frac", ">=", 0.99,
+                                       scheme=SPRITZ_W))))
+            cells.append(Cell(
+                cell_id=f"incast.{topo}.{scale}",
+                figure="fig8", bench="incast", engine="packet",
+                topology=topo, scale=scale, workload="incast",
+                workload_kw={"n_senders": 32 if scale == "full" else 8,
+                             "size_mib": 4.0 if scale == "full" else 0.25,
+                             "seed": 3},
+                n_ticks=1 << 18, spec_kw={"n_pkt_cap": 1 << 17},
+                tiers=tiers, guards=(_G_NO_DOWN,)))
+            cells.append(Cell(
+                cell_id=f"trace.{topo}.{scale}",
+                figure="fig10_11", bench="trace", engine="packet",
+                topology=topo, scale=scale, workload="websearch",
+                workload_kw={"dur_us": 1000.0 if scale == "full" else 100.0,
+                             "load": 1.0,
+                             "max_flows": 20000 if scale == "full"
+                             else 4000, "seed": 4},
+                # ~8x the trace duration, as the legacy bench budgeted
+                # (the horizon driver early-stops once all flows finish)
+                n_ticks=(1 << 14) if scale == "small" else (1 << 17),
+                spec_kw={"n_pkt_cap": 1 << 16},
+                tiers=tiers, guards=(_G_NO_DOWN,)))
+            size = 1024 if scale == "full" else 256
+            for scen in ("static_links", "midrun_links", "flap_links"):
+                guards = [_G_NO_DOWN]
+                if scen == "midrun_links" and topo == "dragonfly":
+                    guards.append(_g_ratio("postfail_fct_mean_us",
+                                           SPRITZ_W, "ops_u", 1.0))
+                cells.append(Cell(
+                    cell_id=f"failures.{topo}.{scen}.{scale}",
+                    figure="fig9", bench="failures", engine="packet",
+                    topology=topo, scale=scale, workload="permutation",
+                    workload_kw={"size_pkts": size, "seed": 6},
+                    schemes=FAILOVER_SCHEMES,
+                    failure=scen, failure_kw={"frac": 0.02, "seed": 5},
+                    n_ticks=1 << 18, spec_kw={"n_pkt_cap": 1 << 17},
+                    tiers=tiers, guards=tuple(guards)))
+
+    # memory model (Table IV): host-side, scheme-free
+    for scale, tiers in (("small", ("ci",)), ("full", ("full",))):
+        cells.append(Cell(
+            cell_id=f"memory.multi.endpoint_memory.{scale}",
+            figure="table4", bench="memory", engine="host",
+            topology="dragonfly", scale=scale, workload="endpoint_memory",
+            workload_kw={"n_pairs": 60, "seed": 0}, tiers=tiers,
+            guards=(_g_counter("max_paths_per_pair", ">=", 2),)))
+
+    # flow-level matrix: every scheme, quick configs nightly (guarded
+    # against BENCH_fabric.json), paper configs in the full tier
+    _FLOW_CFG = {
+        "quick": {"train": {"n_chips": 256, "tp": 16, "shard": 4e6},
+                  "alltoall": {"n_chips": 128, "tp": 16, "shard": 2e6}},
+        "full": {"train": {"n_chips": None, "tp": 16, "shard": 32e6},
+                 "alltoall": {"n_chips": 192, "tp": 16, "shard": 8e6}},
+    }
+    for topo in ("dragonfly1056", "slimfly1134"):
+        for scale, tiers in (("quick", ("ci",)), ("full", ("full",))):
+            for wname in ("train", "alltoall"):
+                guards = []
+                if scale == "quick":
+                    guards += [_g_fabric_baseline(topo, wname, "done_frac",
+                                                  abs_tol=0.02),
+                               _g_fabric_baseline(topo, wname,
+                                                  "fct_ratio_vs_ecmp",
+                                                  tol=0.25)]
+                cells.append(Cell(
+                    cell_id=f"fabric.{topo}.{wname}.{scale}",
+                    figure="fabric_scale", bench="fabric", engine="flow",
+                    topology=topo, scale=scale, workload=wname,
+                    workload_kw=_FLOW_CFG[scale][wname],
+                    tiers=tiers, guards=tuple(guards)))
+            guards = [_g_counter("forced", ">=", 1, scheme=SPRITZ_W)]
+            if scale == "quick":
+                guards += [_g_fabric_baseline(topo, "midrun_failure",
+                                              "done_frac", abs_tol=0.02),
+                           _g_fabric_baseline(topo, "midrun_failure",
+                                              "fct_ratio_vs_ecmp",
+                                              tol=0.25)]
+            cells.append(Cell(
+                cell_id=f"fabric.{topo}.midrun_failure.{scale}",
+                figure="fabric_scale", bench="fabric", engine="flow",
+                topology=topo, scale=scale, workload="train",
+                workload_kw=_FLOW_CFG[scale]["train"],
+                failure="loaded_midrun",
+                failure_kw={"n_links": 8, "fail_at_frac": 4,
+                            "recover_mult": 16},
+                tiers=tiers, guards=tuple(guards)))
+    return cells
+
+
+CELLS: dict[str, Cell] = {}
+for _c in _cells():
+    if _c.cell_id in CELLS:
+        raise ValueError(f"duplicate cell id {_c.cell_id}")
+    CELLS[_c.cell_id] = _c
+del _c
+
+
+def cells(tier: str | None = None, ids=None, bench: str | None = None
+          ) -> list[Cell]:
+    """Select cells by tier, explicit id list, and/or owning bench."""
+    out = list(CELLS.values())
+    if tier is not None:
+        out = [c for c in out if tier in c.tiers]
+    if bench is not None:
+        out = [c for c in out if c.bench == bench]
+    if ids is not None:
+        ids = list(ids)
+        unknown = [i for i in ids if i not in CELLS]
+        if unknown:
+            raise KeyError(f"unknown cell ids: {unknown}; known: "
+                           f"{sorted(CELLS)}")
+        out = [c for c in out if c.cell_id in ids]
+    return out
+
+
+def figures(tier: str | None = None) -> set[str]:
+    return {c.figure for c in cells(tier)}
+
+
+def benches(tier: str | None = None) -> set[str]:
+    return {c.bench for c in cells(tier)}

@@ -1,0 +1,178 @@
+"""Experiment-matrix runner (DESIGN.md §13).
+
+Dispatches selected cells through the packet / flow / host executors,
+emits one normalized JSON per cell under ``results/exp/`` keyed by the
+content hash of ``(cell spec, git-tracked sources)`` — unchanged cells
+are skipped on re-run — and evaluates ratio/counter guards.  Any guard
+breach makes :func:`run` report failure (the CLI exits non-zero).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+from repro.exp import guards as G
+from repro.exp import matrix
+from repro.exp.hashing import cell_hash, repo_root
+from repro.exp.spec import RESULT_SCHEMA_VERSION, validate_result
+
+DEFAULT_OUT = Path("results/exp")
+
+
+@dataclasses.dataclass
+class CellResult:
+    cell_id: str
+    cached: bool
+    rows: list
+    guards: list
+    wall_s: float
+    path: Path
+
+    @property
+    def ok(self) -> bool:
+        return all(g["ok"] for g in self.guards)
+
+
+@dataclasses.dataclass
+class RunSummary:
+    results: list[CellResult]
+    tier: str | None = None
+
+    @property
+    def breaches(self) -> list[str]:
+        return [f"{r.cell_id}: {g['desc']} -> {g.get('value')} "
+                f"({g.get('note', '')})"
+                for r in self.results for g in r.guards if not g["ok"]]
+
+    @property
+    def cache_hits(self) -> int:
+        return sum(r.cached for r in self.results)
+
+    @property
+    def rows(self) -> list[dict]:
+        return [dict(row, cell_id=r.cell_id)
+                for r in self.results for row in r.rows]
+
+    @property
+    def ok(self) -> bool:
+        return not self.breaches
+
+
+def _resolve_schemes(cell):
+    """() == every registered scheme, in registry order."""
+    from repro.net.policies import registry as REG
+    if cell.schemes:
+        return [REG.resolve(s).name for s in cell.schemes]
+    return list(REG.names())
+
+
+def _execute(cell, schemes, verbose):
+    if cell.engine == "packet":
+        from repro.exp.packet import run_packet_cell
+        return run_packet_cell(cell, schemes, list(cell.seeds),
+                               verbose=verbose)
+    if cell.engine == "flow":
+        from repro.exp.flow import run_flow_cell
+        return run_flow_cell(cell, schemes, list(cell.seeds),
+                             verbose=verbose)
+    from repro.exp.host import run_host_cell
+    return run_host_cell(cell, schemes, list(cell.seeds), verbose=verbose)
+
+
+def run_cell(cell, out: Path = DEFAULT_OUT, force: bool = False,
+             verbose: bool = True) -> CellResult:
+    """Run (or cache-skip) one cell; always (re-)evaluates guards so a
+    guard edit is enforced even on a cached result — the hash covers the
+    matrix source anyway, this is defense in depth."""
+    out = Path(out)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"{cell.cell_id}.json"
+    h = cell_hash(cell)
+    schemes = _resolve_schemes(cell)
+
+    if not force and path.is_file():
+        try:
+            prev = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            prev = None
+        if prev and prev.get("hash") == h and not validate_result(prev):
+            verdicts = G.evaluate(cell.guards, prev["rows"])
+            if verbose:
+                print(f"[exp] {cell.cell_id}: cache hit ({h[:12]})",
+                      flush=True)
+            return CellResult(cell.cell_id, True, prev["rows"], verdicts,
+                              prev.get("wall_s", 0.0), path)
+
+    t0 = time.time()
+    rows = _execute(cell, schemes, verbose)
+    wall = round(time.time() - t0, 2)
+    verdicts = G.evaluate(cell.guards, rows)
+    obj = {
+        "schema": RESULT_SCHEMA_VERSION,
+        "cell_id": cell.cell_id,
+        "hash": h,
+        "spec": cell.to_json(),
+        "schemes_run": schemes,
+        "rows": rows,
+        "guards": verdicts,
+        "wall_s": wall,
+    }
+    errs = validate_result(obj)
+    if errs:
+        raise RuntimeError(f"{cell.cell_id}: emitted result fails schema: "
+                           f"{errs}")
+    path.write_text(json.dumps(obj, indent=1))
+    if verbose:
+        status = "OK" if all(v["ok"] for v in verdicts) else "GUARD BREACH"
+        print(f"[exp] {cell.cell_id}: {status} in {wall}s -> {path}",
+              flush=True)
+    return CellResult(cell.cell_id, False, rows, verdicts, wall, path)
+
+
+def run(tier: str | None = None, cells=None, bench: str | None = None,
+        schemes=None, seeds=None, scale: str | None = None,
+        out: Path = DEFAULT_OUT, force: bool = False,
+        results_md: Path | None = None, check: bool = False,
+        verbose: bool = True) -> RunSummary:
+    """Run a cell selection.  ``schemes``/``seeds``/``scale`` derive
+    overridden cells (rewritten ids — they never pollute the registered
+    cells' cache entries).  ``check=True`` raises ``SystemExit`` on any
+    guard breach (the bench shims' strict mode); the CLI instead exits
+    via the returned summary."""
+    selected = matrix.cells(tier=tier, ids=cells, bench=bench)
+    if not selected:
+        raise SystemExit(f"no cells selected (tier={tier}, cells={cells}, "
+                         f"bench={bench})")
+    if schemes is not None or seeds is not None or scale is not None:
+        # a scale override only applies where the engine's topology
+        # table understands it (e.g. --scale mid leaves flow cells —
+        # always paper-scale instances — at their registered scale)
+        from repro.exp.spec import SCALES_BY_ENGINE
+        selected = [
+            c.with_overrides(
+                schemes=schemes, seeds=seeds,
+                scale=scale if scale in SCALES_BY_ENGINE[c.engine] else None)
+            for c in selected]
+    results = [run_cell(c, out=out, force=force, verbose=verbose)
+               for c in selected]
+    summary = RunSummary(results, tier=tier)
+    if verbose:
+        print(f"[exp] {len(results)} cells, {summary.cache_hits} cached, "
+              f"{len(summary.breaches)} guard breaches", flush=True)
+        for b in summary.breaches:
+            print(f"[exp] BREACH {b}", flush=True)
+    if results_md is not None:
+        from repro.exp.report import render_results
+        render_results(summary, Path(results_md), out=Path(out))
+        if verbose:
+            print(f"[exp] wrote {results_md}", flush=True)
+    if check and summary.breaches:
+        raise SystemExit("experiment-matrix guard breach: "
+                         + "; ".join(summary.breaches))
+    return summary
+
+
+def default_results_md() -> Path:
+    return Path(repo_root()) / "RESULTS.md"

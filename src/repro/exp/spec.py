@@ -1,0 +1,159 @@
+"""Declarative experiment-matrix cell model (DESIGN.md §13).
+
+A **cell** is data: ``(topology, workload, engine, schemes, failure
+plan, seeds, scale tier)`` plus the guard list that turns its result
+into a pass/fail verdict.  Cells are registered in
+:mod:`repro.exp.matrix`; :mod:`repro.exp.runner` dispatches them
+through the packet engine (``engine.run_batch``) or the flow-level
+engine (``flowsim.simulate_batch``) and emits one normalized JSON per
+cell under ``results/exp/``.
+
+Guards are expressed **only as ratios and counters** — never absolute
+wall time (shared-container variance; wall time is recorded as
+informational ``wall_s`` fields only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+TIERS = ("smoke", "ci", "full")
+
+# engine dispatch kinds: "packet" = engine.run_batch, "flow" =
+# flowsim.simulate_batch, "host" = host-side analytic cells (path/memory
+# model — no simulator run).
+ENGINES = ("packet", "flow", "host")
+
+# scales a CLI --scale override may retarget per engine.  Packet/host
+# scale picks only the topology size; flow cells' "quick"/"full" is
+# entangled with their chip/shard workload_kw, so they are never
+# retargeted — select the registered quick or full cell instead.
+SCALES_BY_ENGINE = {"packet": ("small", "mid", "full"),
+                    "flow": (),
+                    "host": ("small", "mid", "full")}
+
+RESULT_SCHEMA_VERSION = 1
+
+# guard kinds understood by repro.exp.guards.evaluate
+GUARD_KINDS = ("counter", "ratio", "baseline", "baseline_schemes")
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One experiment-matrix cell.  Everything is plain data — the cell
+    spec (via :meth:`to_json`) is part of the result content-hash, so
+    any edit invalidates the cached result."""
+
+    cell_id: str                      # unique, dotted: bench.topo.workload[.failure].scale
+    figure: str                       # DESIGN.md §8 paper artifact id
+    bench: str                        # owning legacy bench module ("micro", ...)
+    engine: str                       # "packet" | "flow" | "host"
+    topology: str                     # "dragonfly" | "slimfly" | "dragonfly1056" | ...
+    scale: str                        # "small" | "mid" | "full" | "quick"
+    workload: str                     # builder name (repro.exp.workloads / flow cell kind)
+    workload_kw: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    schemes: tuple[str, ...] = ()     # registry names; () == every registered scheme
+    failure: str | None = None        # failure-plan builder name
+    failure_kw: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    seeds: tuple[int, ...] = (0,)
+    n_ticks: int | None = None        # packet engine tick budget
+    spec_kw: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    tiers: tuple[str, ...] = ("ci",)
+    guards: tuple[Mapping[str, Any], ...] = ()
+
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(f"{self.cell_id}: unknown engine {self.engine}")
+        for t in self.tiers:
+            if t not in TIERS:
+                raise ValueError(f"{self.cell_id}: unknown tier {t}")
+        for g in self.guards:
+            if g.get("kind") not in GUARD_KINDS:
+                raise ValueError(f"{self.cell_id}: unknown guard kind "
+                                 f"{g.get('kind')!r}")
+
+    def to_json(self) -> dict:
+        """Canonical JSON form — the hashing payload and the ``spec``
+        block of the emitted result file."""
+        d = dataclasses.asdict(self)
+        d["workload_kw"] = dict(sorted(dict(self.workload_kw).items()))
+        d["failure_kw"] = dict(sorted(dict(self.failure_kw).items()))
+        d["spec_kw"] = dict(sorted(dict(self.spec_kw).items()))
+        d["schemes"] = list(self.schemes)
+        d["seeds"] = list(self.seeds)
+        d["tiers"] = list(self.tiers)
+        d["guards"] = [dict(sorted(g.items())) for g in self.guards]
+        return d
+
+    def with_overrides(self, *, schemes=None, seeds=None, scale=None) -> "Cell":
+        """Derive a cell with a narrowed scheme set / seed list / scale.
+        Any effective override rewrites the id (a deterministic ``@``
+        suffix) so overridden runs never collide with the registered
+        cell's cached result file."""
+        import hashlib
+        cell = self
+        tags = []
+        if schemes is not None and tuple(schemes) != self.schemes:
+            cell = dataclasses.replace(cell, schemes=tuple(schemes))
+            tags.append("s" + hashlib.sha256(
+                ",".join(schemes).encode()).hexdigest()[:8])
+        if seeds is not None and tuple(seeds) != self.seeds:
+            cell = dataclasses.replace(cell, seeds=tuple(seeds))
+            tags.append("r" + hashlib.sha256(
+                ",".join(map(str, seeds)).encode()).hexdigest()[:8])
+        if scale is not None and scale != cell.scale:
+            cell = dataclasses.replace(cell, scale=scale)
+            tags.append(scale)
+        if tags:
+            cell = dataclasses.replace(
+                cell, cell_id=f"{self.cell_id}@{'-'.join(tags)}")
+        return cell
+
+
+def validate_result(obj: dict) -> list[str]:
+    """Schema check for an emitted per-cell result JSON.  Returns a list
+    of problems (empty == valid) — used by the runner before writing and
+    by ``tests/test_exp.py`` as the emitter/guard drift tripwire."""
+    errs = []
+
+    def need(key, typ):
+        if key not in obj:
+            errs.append(f"missing key {key!r}")
+            return None
+        if typ is not None and not isinstance(obj[key], typ):
+            errs.append(f"{key!r} is {type(obj[key]).__name__}, "
+                        f"want {typ.__name__}")
+            return None
+        return obj[key]
+
+    if need("schema", int) != RESULT_SCHEMA_VERSION:
+        errs.append(f"schema != {RESULT_SCHEMA_VERSION}")
+    need("cell_id", str)
+    need("hash", str)
+    spec = need("spec", dict)
+    if spec is not None:
+        for k in ("engine", "topology", "workload", "schemes", "seeds",
+                  "tiers", "guards"):
+            if k not in spec:
+                errs.append(f"spec missing {k!r}")
+    rows = need("rows", list)
+    if rows is not None:
+        for i, r in enumerate(rows):
+            if not isinstance(r, dict):
+                errs.append(f"rows[{i}] not a dict")
+                continue
+            for k in ("scheme", "seed"):
+                if k not in r:
+                    errs.append(f"rows[{i}] missing {k!r}")
+    guards = need("guards", list)
+    if guards is not None:
+        for i, g in enumerate(guards):
+            if not isinstance(g, dict):
+                errs.append(f"guards[{i}] not a dict")
+                continue
+            for k in ("desc", "ok"):
+                if k not in g:
+                    errs.append(f"guards[{i}] missing {k!r}")
+    need("schemes_run", list)
+    need("wall_s", (int, float))
+    return errs

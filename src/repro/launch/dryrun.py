@@ -21,7 +21,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs as C

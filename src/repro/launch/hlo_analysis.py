@@ -25,7 +25,6 @@ own numbers are correct) in tests/test_hlo_analysis.py.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 

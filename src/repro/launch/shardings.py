@@ -12,7 +12,7 @@ import re
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.models.common import ModelCfg
 

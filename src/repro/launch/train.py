@@ -17,7 +17,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs as C
 from repro.ckpt.manager import CheckpointManager, Watchdog

@@ -8,7 +8,6 @@ bounded at 40-90 layer depths.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional
 
 import jax

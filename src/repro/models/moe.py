@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.common import ModelCfg, init_mlp, apply_mlp, shard_hint
+from repro.models.common import ModelCfg, init_mlp, apply_mlp
 from repro.models import common as _common
 
 try:  # modern API (jax >= 0.8)

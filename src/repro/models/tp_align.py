@@ -35,7 +35,6 @@ from __future__ import annotations
 import dataclasses
 import math
 
-import numpy as np
 
 
 def plan(n_heads: int, n_kv: int, tp: int) -> dict:

@@ -4,7 +4,6 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple
 
-import jax.numpy as jnp
 import numpy as np
 
 # ---------------------------------------------------------------- LB schemes

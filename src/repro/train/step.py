@@ -2,7 +2,6 @@
 lowers and the launcher executes)."""
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ mesh-independent full arrays), and training state round-trips exactly."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.ckpt.manager import CheckpointManager
 from repro import configs as C

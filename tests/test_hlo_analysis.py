@@ -2,7 +2,6 @@
 (no scan => XLA's own cost_analysis is exact) and on synthetic loops."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_analysis as H
@@ -59,7 +58,6 @@ def test_matches_unrolled_ground_truth():
 
 def test_collectives_inside_loops_are_multiplied():
     """An all-reduce inside a scan body counts trip_count times."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
     if len(jax.devices()) < 2:
         pytest.skip("needs >1 device (run under dryrun env)")
 

@@ -6,7 +6,6 @@ property-based subset of this module is skipped when it is absent so the
 tier-1 suite still collects on the seed environment.
 """
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

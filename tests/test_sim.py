@@ -1,14 +1,10 @@
 """Packet simulator tests: latency calibration, conservation, FIFO,
 congestion response, dependencies, failures."""
-import numpy as np
-import pytest
 
-from repro.net import paths as P
 from repro.net.sim import build as B
 from repro.net.sim import engine as E
 from repro.net.sim.types import (ECMP, MINIMAL, OPS_U, SCHEME_NAMES, SCOUT,
                                  SPRAY_W, UGAL_L, VALIANT)
-from repro.net.topology.base import TICK_NS
 from repro.net.topology.dragonfly import make_dragonfly
 
 TOPO = make_dragonfly(4, 2, 2)

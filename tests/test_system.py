@@ -2,12 +2,11 @@
 claims a reviewer would check (scheme orderings, failure resilience,
 paper-calibrated latency constants)."""
 import numpy as np
-import pytest
 
 from repro.net.sim import build as B
 from repro.net.sim import engine as E
-from repro.net.sim.types import (ECMP, MINIMAL, SCHEME_NAMES, SCOUT, SPRAY_U,
-                                 SPRAY_W, UGAL_L, VALIANT)
+from repro.net.sim.types import (ECMP, MINIMAL, SCOUT, SPRAY_U,
+                                 SPRAY_W, UGAL_L)
 from repro.net.topology.dragonfly import make_dragonfly
 from repro.net.workloads import adversarial, motivational, permutation
 

@@ -1,14 +1,12 @@
 """TP head alignment (models/tp_align.py): the padded model must be
 function-equivalent to the exact config, for both replication (tp % n_kv
 == 0) and dead-head padding, across the awkward-head assigned archs."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import configs as C
 from repro.models import lm, tp_align
 from repro.models.common import ModelCfg
 

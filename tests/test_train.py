@@ -1,12 +1,9 @@
 """Training substrate tests: optimizer, schedules, compression, checkpoint/
 restart, preemption, data determinism."""
-import json
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt.manager import CheckpointManager, Watchdog
 from repro.data.pipeline import DataCfg, TokenStream

@@ -12,7 +12,6 @@ Each test here fails on the pre-fix generators:
 * the bridge's flow-byte -> packet conversion mixed the payload (4096)
   and wire (4160) constants between sizes and start offsets.
 """
-import numpy as np
 import pytest
 
 from repro.fabric import bridge

@@ -12,11 +12,20 @@ Three scenario axes per topology (DESIGN.md §10), all registered as
   window, gated by the cells' ratio guards (Spritz vs OPS(u)).
 * ``flap_links`` — a subset of links flaps periodically (REPS /
   FatPaths-style chaos axis; not in the paper).
+* ``degraded_links`` — brownout: links drop to a fraction of line rate
+  (time-varying capacity schedule, DESIGN.md §10) over the mid-flight
+  window and heal.  Ports stay *up* — schemes must steer around slow,
+  not dead, capacity via the load/ECN signal.
+* ``chaos`` (smoke/chaos tiers) — seeded randomized capacity schedules
+  (brownouts, outages, oversubscription, tenants, flaps, drains) with
+  graceful-degradation guards: bounded ``degrade_ratio`` vs an
+  in-session healthy baseline and zero ``rate_violations``.
 
 Baselines: the failover scheme set — Minimal, ECMP, UGAL-L and Flicr
 cannot finish within the paper's time limit there.  This module is a
 thin shim; ``--quick`` (the CI smoke of old) runs the smoke-tier
-mid-run cell with ``strict`` guard enforcement."""
+failure cells (mid-run + seeded chaos) with ``strict`` guard
+enforcement."""
 from __future__ import annotations
 
 from pathlib import Path

@@ -43,6 +43,10 @@ def main(argv=None) -> int:
     rp.add_argument("--scale", default=None,
                     choices=["small", "mid", "full", "quick"],
                     help="scale override (derives new cell ids)")
+    rp.add_argument("--chaos-seeds", default=None,
+                    help="comma-separated extra schedule seeds: every "
+                         "selected chaos cell is re-rolled per seed "
+                         "(seeds are recorded in the result JSONs)")
     rp.add_argument("--out", default=str(runner.DEFAULT_OUT))
     rp.add_argument("--force", action="store_true",
                     help="ignore cached results")
@@ -83,11 +87,13 @@ def main(argv=None) -> int:
         results_md = Path(args.results_md) if args.results_md \
             else runner.default_results_md()
     seeds = [int(s) for s in _csv(args.seeds)] if args.seeds else None
+    chaos_seeds = [int(s) for s in _csv(args.chaos_seeds)] \
+        if args.chaos_seeds else None
     summary = runner.run(
         tier=args.tier, cells=_csv(args.cells), bench=args.bench,
         schemes=_csv(args.schemes), seeds=seeds, scale=args.scale,
-        out=Path(args.out), force=args.force, results_md=results_md,
-        verbose=not args.quiet)
+        chaos_seeds=chaos_seeds, out=Path(args.out), force=args.force,
+        results_md=results_md, verbose=not args.quiet)
     return 1 if summary.breaches else 0
 
 

@@ -13,7 +13,7 @@ from collections import Counter
 
 from repro.fabric import bridge
 from repro.fabric import flowsim as FS
-from repro.net.sim.failures import FailureSchedule
+from repro.net.sim.failures import FailureSchedule, chaos_schedule
 from repro.net.topology.base import BYTES_PER_TICK, BYTES_PER_US, GLOBAL
 
 from repro.exp.workloads import make_topology
@@ -64,23 +64,39 @@ def _flow_set(cell, topo):
 
 
 def _failure_plan(cell, topo, flows):
-    """Mid-run outage over the loaded global links: down at
-    1/``fail_at_frac`` of the solo horizon, recovered at
-    ``recover_mult``x — outliving contention slack, so static schemes
-    measurably stall (DESIGN.md §12)."""
+    """Flow-level failure/degradation scenarios over the *loaded*
+    links (a uniformly sampled set usually misses a sub-fabric cell).
+
+    ``loaded_midrun``: outage at 1/``fail_at_frac`` of the solo horizon,
+    recovered at ``recover_mult``x — outliving contention slack, so
+    static schemes measurably stall (DESIGN.md §12).
+    ``loaded_degraded``: same window, but the links brown out to
+    ``rate`` of line rate instead of dying — capacities masked via the
+    compiled schedule, ports stay alive.
+    ``chaos``: seeded randomized capacity schedule over the whole
+    fabric (seed recorded in the cell's ``failure_kw``)."""
     if cell.failure is None:
         return None
-    if cell.failure != "loaded_midrun":
+    kw = dict(cell.failure_kw)
+    horizon = int(max(f.size_bytes for f in flows) / BYTES_PER_TICK)
+    if cell.failure == "chaos":
+        return chaos_schedule(
+            topo, horizon=horizon * int(kw.get("horizon_mult", 4)),
+            seed=int(kw.get("seed", 0)),
+            n_events=int(kw.get("n_events", 4)),
+            max_links=int(kw.get("max_links", 3)))
+    if cell.failure not in ("loaded_midrun", "loaded_degraded"):
         raise ValueError(f"{cell.cell_id}: unknown flow failure plan "
                          f"{cell.failure!r}")
-    kw = dict(cell.failure_kw)
     n_links = int(kw.get("n_links", 8))
-    horizon = int(max(f.size_bytes for f in flows) / BYTES_PER_TICK)
     fail_at = max(1, horizon // int(kw.get("fail_at_frac", 4)))
     recover_at = horizon * int(kw.get("recover_mult", 16))
+    links = loaded_global_links(topo, flows, n_links)
+    if cell.failure == "loaded_degraded":
+        return FailureSchedule(topo).degrade_links(
+            fail_at, links, float(kw.get("rate", 0.25)), until=recover_at)
     return (FailureSchedule(topo)
-            .fail_links(at=fail_at,
-                        links=loaded_global_links(topo, flows, n_links))
+            .fail_links(at=fail_at, links=links)
             .recover(at=recover_at))
 
 
@@ -113,6 +129,7 @@ def run_flow_cell(cell, schemes, seeds, verbose=True) -> list[dict]:
                    "reselections": int(res.reselections),
                    "forced": int(res.forced),
                    "epochs": int(res.epochs),
+                   "rate_violations": int(res.rate_violations),
                    "wall_s": round(wall / max(len(per_seed), 1), 2),
                    "table_wall_s": table_wall}
             if name == "ecmp" and row["fct_us"] > 0:

@@ -1,5 +1,5 @@
 """THE experiment matrix (DESIGN.md §13): every paper figure/table cell
-as data, across tiers ``smoke`` / ``ci`` / ``full``.
+as data, across tiers ``smoke`` / ``ci`` / ``chaos`` / ``full``.
 
 * ``smoke`` — the per-PR CI gate: a handful of minutes-scale cells
   spanning both engines, both topologies and a mid-run failure plan,
@@ -8,6 +8,13 @@ as data, across tiers ``smoke`` / ``ci`` / ``full``.
 * ``ci`` — the nightly matrix: every figure at reduced scale, all
   registered schemes, both topologies, guarded against the checked-in
   baselines.
+* ``chaos`` — seeded randomized capacity schedules (DESIGN.md §10):
+  brownouts, drains, oversubscription, tenants, flaps.  Guards assert
+  graceful degradation for the adaptive schemes — bounded
+  ``degrade_ratio`` vs an in-session healthy baseline, zero
+  ``down_violations`` / ``rate_violations`` — while static schemes run
+  unguarded (they are allowed to collapse).  Nightly re-rolls extra
+  seeds via ``--chaos-seeds``; each lands in the result JSON's spec.
 * ``full`` — the paper-scale reproduction (slow; refreshes the numbers
   EXPERIMENTS.md reports).
 
@@ -26,8 +33,15 @@ FAILOVER_SCHEMES = ("valiant", "ops_u", "ops_w", "spritz_scout",
                     "spritz_spray_u", SPRITZ_W, "reps")
 SMOKE_SCHEMES = ("ecmp", "ugal_l", "ops_u", SPRITZ_W, "reps")
 FLOW_SMOKE_SCHEMES = ("ecmp", "ops_u", SPRITZ_W)
+# chaos cells mix static schemes (may collapse, unguarded) with the
+# adaptive set that must degrade gracefully
+CHAOS_STATIC = ("minimal", "ecmp")
+CHAOS_ADAPTIVE = ("ops_u", "spritz_scout", SPRITZ_W, "reps")
+CHAOS_SCHEMES = CHAOS_STATIC + CHAOS_ADAPTIVE
 
 _G_NO_DOWN = {"kind": "counter", "metric": "down_violations",
+              "op": "==", "value": 0}
+_G_NO_RATE = {"kind": "counter", "metric": "rate_violations",
               "op": "==", "value": 0}
 
 
@@ -47,6 +61,17 @@ def _g_fabric_baseline(topo, cell, metric, **kw):
     return {"kind": "baseline_schemes", "file": "BENCH_fabric.json",
             "path": f"quick_cells.{topo}.{cell}.schemes",
             "metric": metric, **kw}
+
+
+def _g_graceful(ratio_bound, done_min=0.99):
+    """Graceful-degradation guard set for the adaptive schemes: every
+    adaptive lane finishes its flows and stays within ``ratio_bound`` x
+    its own healthy-baseline mean FCT.  Static lanes are unguarded."""
+    gs = [_G_NO_DOWN, _G_NO_RATE]
+    for s in CHAOS_ADAPTIVE:
+        gs.append(_g_counter("done_frac", ">=", done_min, scheme=s))
+        gs.append(_g_counter("degrade_ratio", "<=", ratio_bound, scheme=s))
+    return tuple(gs)
 
 
 def _cells() -> list[Cell]:
@@ -74,7 +99,7 @@ def _cells() -> list[Cell]:
             failure="midrun_links", failure_kw={"frac": 0.02, "seed": 5},
             n_ticks=1 << 18, spec_kw={"n_pkt_cap": 1 << 17},
             tiers=("smoke",),
-            guards=(_G_NO_DOWN,
+            guards=(_G_NO_DOWN, _G_NO_RATE,
                     _g_ratio("postfail_fct_mean_us", "spritz_scout",
                              "ops_u", 1.0),
                     _g_ratio("postfail_fct_mean_us", "spritz_spray_u",
@@ -109,7 +134,45 @@ def _cells() -> list[Cell]:
                      "metric": "steps", "scheme": "ecmp",
                      "tol": 0.25, "dir": "max"}),
         ),
+        # seeded chaos smoke cell (also the ci.yml chaos step): one
+        # fixed recorded seed, randomized only across ``--chaos-seeds``
+        Cell(
+            cell_id="chaos.dragonfly.s7.smoke",
+            figure="chaos_tier", bench="failures", engine="packet",
+            topology="dragonfly", scale="small", workload="permutation",
+            workload_kw={"size_pkts": 256, "seed": 6},
+            schemes=CHAOS_SCHEMES,
+            failure="chaos",
+            failure_kw={"seed": 7, "n_events": 4, "max_links": 3},
+            n_ticks=1 << 18,
+            spec_kw={"n_pkt_cap": 1 << 17, "with_healthy_ref": True},
+            tiers=("smoke", "chaos"),
+            guards=_g_graceful(4.0),
+        ),
     ]
+
+    # ------------------------------------------------- chaos tier:
+    # additional recorded seeds per topology (nightly re-rolls more via
+    # --chaos-seeds; derived cells keep these guards)
+    for topo in ("dragonfly", "slimfly"):
+        for cseed in (11, 23):
+            cells.append(Cell(
+                cell_id=f"chaos.{topo}.s{cseed}.small",
+                figure="chaos_tier", bench="failures", engine="packet",
+                topology=topo, scale="small", workload="permutation",
+                workload_kw={"size_pkts": 256, "seed": 6},
+                schemes=CHAOS_SCHEMES,
+                failure="chaos",
+                failure_kw={"seed": cseed, "n_events": 5, "max_links": 3},
+                n_ticks=1 << 18,
+                spec_kw={"n_pkt_cap": 1 << 17, "with_healthy_ref": True},
+                tiers=("chaos",),
+                # harsher schedules (5 waves incl. switch drains, which
+                # hit delivery ports no scheme can route around): the
+                # bound asserts no collapse, with headroom over the
+                # observed worst (~5.3x on slimfly)
+                guards=_g_graceful(8.0)))
+
     # flow-level smoke: the BENCH_fabric.json guard cells (quick configs)
     cells += [
         Cell(
@@ -217,18 +280,24 @@ def _cells() -> list[Cell]:
                 spec_kw={"n_pkt_cap": 1 << 16},
                 tiers=tiers, guards=(_G_NO_DOWN,)))
             size = 1024 if scale == "full" else 256
-            for scen in ("static_links", "midrun_links", "flap_links"):
-                guards = [_G_NO_DOWN]
+            for scen in ("static_links", "midrun_links", "flap_links",
+                         "degraded_links"):
+                guards = [_G_NO_DOWN, _G_NO_RATE]
                 if scen == "midrun_links" and topo == "dragonfly":
                     guards.append(_g_ratio("postfail_fct_mean_us",
                                            SPRITZ_W, "ops_u", 1.0))
+                fkw = {"frac": 0.02, "seed": 5}
+                if scen == "degraded_links":
+                    # bench_failures' brownout scenario: links at 1/4
+                    # line rate over the mid-flight window
+                    fkw = {"frac": 0.05, "rate": 0.25, "seed": 5}
                 cells.append(Cell(
                     cell_id=f"failures.{topo}.{scen}.{scale}",
                     figure="fig9", bench="failures", engine="packet",
                     topology=topo, scale=scale, workload="permutation",
                     workload_kw={"size_pkts": size, "seed": 6},
                     schemes=FAILOVER_SCHEMES,
-                    failure=scen, failure_kw={"frac": 0.02, "seed": 5},
+                    failure=scen, failure_kw=fkw,
                     n_ticks=1 << 18, spec_kw={"n_pkt_cap": 1 << 17},
                     tiers=tiers, guards=tuple(guards)))
 
@@ -281,6 +350,35 @@ def _cells() -> list[Cell]:
                 failure_kw={"n_links": 8, "fail_at_frac": 4,
                             "recover_mult": 16},
                 tiers=tiers, guards=tuple(guards)))
+
+    # flow-level chaos tier: capacity masking at paper scale — the
+    # loaded links brown out to 1/4 rate mid-run, and a seeded chaos
+    # schedule stresses the whole fabric
+    cells.append(Cell(
+        cell_id="fabric.dragonfly1056.degraded.quick",
+        figure="chaos_tier", bench="fabric", engine="flow",
+        topology="dragonfly1056", scale="quick", workload="train",
+        workload_kw=_FLOW_CFG["quick"]["train"],
+        failure="loaded_degraded",
+        failure_kw={"n_links": 8, "rate": 0.25, "fail_at_frac": 4,
+                    "recover_mult": 16},
+        schemes=FLOW_SMOKE_SCHEMES, tiers=("chaos",),
+        guards=(_G_NO_RATE,
+                _g_counter("done_frac", ">=", 0.999, scheme=SPRITZ_W),
+                _g_ratio("fct_us", SPRITZ_W, "ecmp", 1.0)),
+    ))
+    cells.append(Cell(
+        cell_id="fabric.dragonfly1056.chaos.quick",
+        figure="chaos_tier", bench="fabric", engine="flow",
+        topology="dragonfly1056", scale="quick", workload="train",
+        workload_kw=_FLOW_CFG["quick"]["train"],
+        failure="chaos",
+        failure_kw={"seed": 11, "n_events": 5, "max_links": 3,
+                    "horizon_mult": 4},
+        schemes=FLOW_SMOKE_SCHEMES, tiers=("chaos",),
+        guards=(_G_NO_RATE,
+                _g_counter("done_frac", ">=", 0.999, scheme=SPRITZ_W)),
+    ))
     return cells
 
 

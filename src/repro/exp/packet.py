@@ -80,7 +80,8 @@ def run_schemes(topo, flows, schemes, *, n_ticks, seeds=(0,), seed=0,
                "steps": int(res.steps_executed),
                "ticks": int(res.ticks_simulated),
                "compression": round(res.compression, 3),
-               "down_violations": int(res.down_violations)}
+               "down_violations": int(res.down_violations),
+               "rate_violations": int(res.rate_violations)}
         row.update(fct_stats(res))
         for name, m in (masks or {}).items():
             row.update(fct_stats(res, m, prefix=f"{name}_"))
@@ -136,6 +137,11 @@ def run_packet_cell(cell, schemes, seeds, verbose=True) -> list[dict]:
     # pseudo spec_kw consumed here, not by build_spec: opt into the
     # dense-reference timing pair (its ratio is gateable, DESIGN.md §13)
     with_dense_ref = bool(spec_kw.pop("with_dense_ref", False))
+    # pseudo spec_kw: additionally sweep the SAME workload with no
+    # failure plan and report per-(scheme, seed) ``degrade_ratio`` =
+    # degraded / healthy mean FCT — the graceful-degradation signal the
+    # chaos-tier counter guards gate (in-session ratio, never wall time)
+    with_healthy_ref = bool(spec_kw.pop("with_healthy_ref", False))
     if verbose:
         print(f"[exp/{cell.cell_id}] {len(wl.flows)} flows, "
               f"{len(schemes)} schemes x {len(seeds)} seeds", flush=True)
@@ -145,6 +151,27 @@ def run_packet_cell(cell, schemes, seeds, verbose=True) -> list[dict]:
         spec_kw=spec_kw, postfail_tick=fail.t_fail,
         collective=wl.collective, with_dense_ref=with_dense_ref,
         verbose=verbose)
+    if with_healthy_ref:
+        # healthy baseline: same flows/schemes/seeds, failure-free spec
+        # (cell.spec_kw only — no plan, no static link mask)
+        h_kw = {k: v for k, v in dict(cell.spec_kw).items()
+                if k not in ("with_dense_ref", "with_healthy_ref",
+                             "failure_plan", "failed_links")}
+        healthy = run_schemes(
+            topo, wl.flows, schemes, n_ticks=cell.n_ticks or (1 << 17),
+            seeds=seeds, stop_flows=wl.stop_flows, masks=wl.masks,
+            spec_kw=h_kw, collective=wl.collective, verbose=False)
+        for (row, _), (hrow, _) in zip(got, healthy):
+            assert (row["scheme"], row["seed"]) == (hrow["scheme"],
+                                                    hrow["seed"])
+            row["healthy_fct_mean_us"] = hrow["fct_mean_us"]
+            if hrow["fct_mean_us"] <= 0:
+                row["degrade_ratio"] = -1.0      # healthy ref broken: no verdict
+            elif row["fct_mean_us"] <= 0:
+                row["degrade_ratio"] = 1e9       # collapsed: fails any <= bound
+            else:
+                row["degrade_ratio"] = round(
+                    row["fct_mean_us"] / hrow["fct_mean_us"], 3)
     rows = []
     for row, _res in got:
         row["workload"] = cell.workload

@@ -131,20 +131,46 @@ def run_cell(cell, out: Path = DEFAULT_OUT, force: bool = False,
     return CellResult(cell.cell_id, False, rows, verdicts, wall, path)
 
 
+def chaos_seed_cells(selected, chaos_seeds):
+    """Re-roll every selected chaos cell over ``chaos_seeds``: each
+    derived cell swaps the schedule seed in ``failure_kw`` and tags the
+    id (``@cs<seed>``), so its result JSON — whose spec block records
+    the seed — never collides with the registered cell's cache.  The
+    registered fixed-seed cells stay in the selection; non-chaos cells
+    pass through untouched."""
+    out = []
+    for c in selected:
+        out.append(c)
+        if c.failure != "chaos":
+            continue
+        for s in chaos_seeds:
+            s = int(s)
+            if s == int(dict(c.failure_kw).get("seed", 0)):
+                continue
+            fkw = dict(c.failure_kw)
+            fkw["seed"] = s
+            out.append(dataclasses.replace(
+                c, failure_kw=fkw, cell_id=f"{c.cell_id}@cs{s}"))
+    return out
+
+
 def run(tier: str | None = None, cells=None, bench: str | None = None,
         schemes=None, seeds=None, scale: str | None = None,
-        out: Path = DEFAULT_OUT, force: bool = False,
+        chaos_seeds=None, out: Path = DEFAULT_OUT, force: bool = False,
         results_md: Path | None = None, check: bool = False,
         verbose: bool = True) -> RunSummary:
     """Run a cell selection.  ``schemes``/``seeds``/``scale`` derive
     overridden cells (rewritten ids — they never pollute the registered
-    cells' cache entries).  ``check=True`` raises ``SystemExit`` on any
-    guard breach (the bench shims' strict mode); the CLI instead exits
-    via the returned summary."""
+    cells' cache entries); ``chaos_seeds`` additionally re-rolls chaos
+    cells over extra schedule seeds.  ``check=True`` raises
+    ``SystemExit`` on any guard breach (the bench shims' strict mode);
+    the CLI instead exits via the returned summary."""
     selected = matrix.cells(tier=tier, ids=cells, bench=bench)
     if not selected:
         raise SystemExit(f"no cells selected (tier={tier}, cells={cells}, "
                          f"bench={bench})")
+    if chaos_seeds:
+        selected = chaos_seed_cells(selected, chaos_seeds)
     if schemes is not None or seeds is not None or scale is not None:
         # a scale override only applies where the engine's topology
         # table understands it (e.g. --scale mid leaves flow cells —

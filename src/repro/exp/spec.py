@@ -17,7 +17,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping
 
-TIERS = ("smoke", "ci", "full")
+# "chaos" is the randomized-degradation tier (DESIGN.md §10/§13): cells
+# with seeded capacity schedules; nightly derives extra seeds via
+# ``--chaos-seeds`` (each recorded in the result JSON's spec block).
+TIERS = ("smoke", "ci", "chaos", "full")
 
 # engine dispatch kinds: "packet" = engine.run_batch, "flow" =
 # flowsim.simulate_batch, "host" = host-side analytic cells (path/memory

@@ -12,7 +12,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.net.sim import build as B
-from repro.net.sim.failures import FailureSchedule, all_links, sample_links
+from repro.net.sim.failures import (FailureSchedule, all_links,
+                                    chaos_schedule, sample_links)
 from repro.net.topology.dragonfly import make_dragonfly
 from repro.net.topology.slimfly import make_slimfly
 from repro.net.workloads import (adversarial, allreduce_butterfly,
@@ -185,10 +186,42 @@ def _fp_flap_links(topo, cell, *, frac: float = 0.02,
                       t_fail=t_fail)
 
 
+def _fp_degraded_links(topo, cell, *, frac: float = 0.05, rate: float = 0.25,
+                       seed: int = 5) -> FailureCtx:
+    """Brownout: sampled links drop to ``rate`` of line rate over the
+    same mid-flight window the outage scenarios use, then heal.  Ports
+    stay *up* throughout — adaptive schemes must steer away from slow
+    (not dead) capacity via the load/ECN signal alone."""
+    size = int(cell.workload_kw["size_pkts"])
+    t_fail, t_recover = fail_window(size)
+    plan = FailureSchedule(topo).degrade_links(
+        t_fail, sampled_failed_links(topo, frac, seed), rate,
+        until=t_recover)
+    return FailureCtx({"failure_plan": plan, "block_ticks": 4 * size},
+                      t_fail=t_fail)
+
+
+def _fp_chaos(topo, cell, *, seed: int = 0, n_events: int = 4,
+              max_links: int = 3, horizon_mult: int = 8) -> FailureCtx:
+    """Seeded randomized capacity schedule (brownouts / outages /
+    oversubscription / tenants / flaps / drains) via
+    :func:`repro.net.sim.failures.chaos_schedule`.  The seed lives in
+    the cell's ``failure_kw`` and therefore in the result JSON's spec
+    block — every chaos run is reproducible from its recorded seed.
+    All events recover by ``settle_frac`` of the horizon, so graceful
+    degradation (bounded FCT ratio, full completion) is a fair ask."""
+    size = int(cell.workload_kw["size_pkts"])
+    plan = chaos_schedule(topo, horizon=horizon_mult * size, seed=seed,
+                          n_events=n_events, max_links=max_links)
+    return FailureCtx({"failure_plan": plan, "block_ticks": 2 * size})
+
+
 FAILURES = {
     "static_links": _fp_static_links,
     "midrun_links": _fp_midrun_links,
     "flap_links": _fp_flap_links,
+    "degraded_links": _fp_degraded_links,
+    "chaos": _fp_chaos,
 }
 
 

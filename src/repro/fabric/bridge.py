@@ -192,7 +192,8 @@ def fabric_report(topo: Topology, kind: str, shard_bytes: float,
             "done_frac": float((res.fct >= 0).mean()),
             "reselections": res.reselections,
             "forced": res.forced,
-            "epochs": res.epochs}
+            "epochs": res.epochs,
+            "rate_violations": res.rate_violations}
     return out
 
 

@@ -20,11 +20,15 @@ compare, Spritz hot-link eviction with hysteresis).  There is no
 flow-level scheme enum any more — names/codes/rules are the registry's.
 
 Failure timelines (``repro.net.sim.failures.FailureSchedule``, DESIGN.md
-§10) are supported: scheduled link-down/recover events mask the
-incidence columns (a down port has zero capacity, so flows pinned
-across it stall at rate 0) and force adaptive lanes to re-select off
-dead paths; ``static`` lanes stall until recovery, mirroring the packet
-engine's ECMP behaviour.
+§10) are supported as *capacity* schedules: each compiled event sets a
+port's fractional capacity ``1/event_ivl`` (0 when down), the
+water-filler caps each link at its live capacity (a down port has zero
+capacity, so flows pinned across it stall at rate 0; a brownout port
+throttles them), and the hot-link load signal is capacity-normalized
+(``load / cap``) so adaptive lanes steer away from degraded links just
+as the packet engine's ticks-to-drain occupancy does.  ``static`` lanes
+stall until recovery, mirroring the packet engine's ECMP behaviour.
+Binary plans (cap in {0, 1}) reduce to the exact pre-rate arithmetic.
 
 Everything is numpy (host-side); the packet-level simulator remains the
 ground truth for protocol dynamics (trims, OOO, cwnd).  Times are in
@@ -56,6 +60,8 @@ class FlowResult:
     reselections: int        # accepted path moves
     epochs: int              # progressive-filling epochs executed
     forced: int = 0          # moves forced by a failed current path
+    rate_violations: int = 0  # epochs x links where allocated rate
+    #   exceeded the scheduled capacity (conformance audit; must be 0)
 
 
 class PathDB:
@@ -318,13 +324,19 @@ def _init_choice(rule, table: FlowTable, rng: np.random.Generator,
 
 
 def _compile_plan(topo: Topology, failure_plan):
-    """FailureSchedule | FailurePlan -> (event byte-times, ports, ups)."""
+    """FailureSchedule | FailurePlan -> (event byte-times, ports, caps).
+
+    Event capacities are the fractional line rate ``1/event_ivl`` the
+    packet engine's service intervals quantize to (0 = down), so both
+    fidelities consume the identical compiled schedule."""
     if failure_plan is None:
         return None
     plan = failure_plan.compile() if hasattr(failure_plan, "compile") \
         else failure_plan
+    ivl = np.asarray(plan.event_ivl, np.float64)
+    caps = np.where(ivl > 0, 1.0 / np.maximum(ivl, 1.0), 0.0)
     return (plan.event_tick.astype(np.float64) * BYTES_PER_TICK,
-            plan.port_id.astype(np.int64), plan.port_up.astype(bool))
+            plan.port_id.astype(np.int64), caps)
 
 
 def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
@@ -359,8 +371,9 @@ def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
     epoch = -1
 
     plan = _compile_plan(topo, failure_plan)
-    port_up = np.ones(n_links, bool)
+    port_cap = np.ones(n_links)   # live fractional capacity (0 = down)
     ev_i = 0
+    rviol = 0
     path_alive = None        # [F, P] — lazily maintained under a plan
 
     # candidate-weight matrices per rule (static per run; failure events
@@ -377,12 +390,12 @@ def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
         nonlocal ev_i, path_alive
         applied = False
         while ev_i < len(plan[0]) and plan[0][ev_i] <= now + 1e-9:
-            port_up[plan[1][ev_i]] = plan[2][ev_i]
+            port_cap[plan[1][ev_i]] = plan[2][ev_i]
             ev_i += 1
             applied = True
         if applied:
-            path_alive = ~((~port_up)[np.where(table.path_valid,
-                                               table.path_ports, 0)]
+            path_alive = ~((port_cap == 0)[np.where(table.path_valid,
+                                                    table.path_ports, 0)]
                            & table.path_valid).any(axis=2)
         return applied
 
@@ -418,6 +431,11 @@ def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
             sel = (active[:, None] & cur_valid).ravel()
             load = np.bincount(np.where(cur_valid, cur_ports, 0).ravel()[sel],
                                minlength=n_links).astype(np.float64)
+            if plan is not None:
+                # capacity-normalized load: a half-rate link carrying k
+                # flows is as hot as a full link carrying 2k (identical
+                # to the raw count for binary plans, where cap is 0/1)
+                load = load / np.where(port_cap > 0, port_cap, 1.0)
             if (load > 0).any():
                 hot = load >= max(1.0, np.quantile(load[load > 0], hot_frac))
             else:
@@ -425,7 +443,7 @@ def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
             cross_hot = (hot[np.where(cur_valid, cur_ports, 0)]
                          & cur_valid).any(axis=1)
             if plan is not None:
-                dead_cur = ((~port_up)[np.where(cur_valid, cur_ports, 0)]
+                dead_cur = ((port_cap == 0)[np.where(cur_valid, cur_ports, 0)]
                             & cur_valid).any(axis=1)
             else:
                 dead_cur = np.zeros(F, bool)
@@ -492,9 +510,18 @@ def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
 
         # ---- dense progressive filling --------------------------------
         rates = _maxmin_rates_dense(cur_ports, cur_valid, active, n_links,
-                                    cap0=port_up.astype(np.float64)
+                                    cap0=port_cap
                                     if plan is not None else None)
         rates[~active] = 0.0
+        if plan is not None:
+            # conformance audit: allocated per-link rate never exceeds
+            # the scheduled capacity (counts violating links per epoch)
+            sel_r = (active[:, None] & cur_valid).ravel()
+            link_r = np.bincount(
+                np.where(cur_valid, cur_ports, 0).ravel()[sel_r],
+                weights=np.repeat(rates, cur_ports.shape[1])[sel_r],
+                minlength=n_links)
+            rviol += int((link_r > port_cap + 1e-9).sum())
         pos = rates > 1e-15
         future = start[(remaining > 0) & (start > t)]
         if not pos.any():
@@ -520,7 +547,7 @@ def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
             break
 
     return FlowResult(fct=fct, reselections=resel, epochs=epoch + 1,
-                      forced=forced)
+                      forced=forced, rate_violations=rviol)
 
 
 def simulate_batch(topo: Topology, flows: list[FlowSpec], schemes,

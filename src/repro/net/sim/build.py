@@ -187,6 +187,7 @@ def build_spec(
         fail_event_tick=plan.event_tick,
         fail_event_port=plan.port_id,
         fail_event_up=plan.port_up,
+        fail_event_ivl=plan.event_ivl,
         explore_threshold=(explore_threshold if explore_threshold is not None
                            else max(4, bdp // 2)),
         ecn_threshold=(ecn_threshold if ecn_threshold is not None

@@ -50,6 +50,20 @@ from repro.net.sim.types import (FB_ACK_ECN, FB_ACK_OK, FB_NACK, FB_NONE,
                                  SimSpec)
 
 INF_TICK = jnp.int32(1 << 30)
+_NEVER_SVC = -(1 << 30)   # last_svc sentinel: first service always legal
+
+
+def _event_ivls(spec: SimSpec) -> np.ndarray:
+    """Per-event service intervals (ticks/packet, 0 = down).  Pre-rate
+    callers build specs with an empty ``fail_event_ivl`` — derive the
+    binary encoding (up -> 1, down -> 0) from ``fail_event_up``."""
+    if len(spec.fail_event_ivl) == len(spec.fail_event_tick):
+        return np.asarray(spec.fail_event_ivl, np.int32)
+    return np.where(spec.fail_event_up, 1, 0).astype(np.int32)
+
+
+def _ceildiv(a, b):
+    return (a + b - 1) // b
 
 # one-hot intermediates ([M, n_ports] rank histogram, [N, n_flows] flow-sum
 # GEMM operand) are used while they stay under this many cells; beyond it
@@ -63,8 +77,12 @@ class Carry(NamedTuple):
     q_tail: jax.Array          # [n_ports] i32
     # failure timeline (DESIGN.md §10): live link state + next-event cursor
     port_up: jax.Array         # [n_ports] bool
+    port_ivl: jax.Array        # [n_ports] i32 — live service interval
+    #   (ticks/packet; a down port keeps its pre-outage interval)
+    last_svc: jax.Array        # [n_ports] i32 — last service tick (rate audit)
     fail_idx: jax.Array        # [] i32 — first unapplied timeline event
     viol: jax.Array            # [] i32 — services across a down port (== 0)
+    rviol: jax.Array           # [] i32 — services above scheduled rate (== 0)
     # packet table
     pstate: jax.Array          # [N] i32
     pflow: jax.Array           # [N] i32
@@ -160,6 +178,13 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
     fev_tick = jnp.asarray(spec.fail_event_tick, jnp.int32)   # [E]
     fev_port = jnp.asarray(spec.fail_event_port, jnp.int32)   # [E]
     fev_up = jnp.asarray(spec.fail_event_up, bool)            # [E]
+    fev_ivl_np = _event_ivls(spec)
+    fev_ivl = jnp.asarray(fev_ivl_np, jnp.int32)              # [E]
+    # rate machinery is traced only for plans that actually carry degraded
+    # intervals — binary up/down plans compile to the identical program
+    # (the new carry fields ride along as untouched constants), which is
+    # what keeps pre-rate plans bit-identical including steps_executed.
+    HAS_RATE = bool((fev_ivl_np > 1).any())
 
     n_eps = int(spec.src_ep.max()) + 1 if len(spec.src_ep) else 1
     # Per-tick enqueue bound: each port services <= 1 pkt/tick and per-port
@@ -190,8 +215,8 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         dense stepper sees the same sets tick by tick).  Last event per
         port wins — a scatter-max over event index."""
         if not E_EV:
-            return (c.port_up, c.fail_idx, c.q_tail, c.pstate, c.pevent,
-                    c.trims)
+            return (c.port_up, c.port_ivl, c.last_svc, c.fail_idx,
+                    c.q_tail, c.pstate, c.pevent, c.trims)
         eidx = jnp.arange(E_EV, dtype=jnp.int32)
         due = (eidx >= c.fail_idx) & (fev_tick <= t)
         last = jnp.full(NP_ + 1, -1, jnp.int32).at[
@@ -219,7 +244,33 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
             jnp.where(killq, c.pflow, F)].add(1)[:F]
         q_tail0 = jnp.where(went_down, jnp.minimum(c.q_tail, t),
                             c.q_tail)
-        return new_up, fail_idx, q_tail0, pstate0, pevent0, trims0
+        if not HAS_RATE:
+            return (new_up, c.port_ivl, c.last_svc, fail_idx, q_tail0,
+                    pstate0, pevent0, trims0)
+        # rate application: only up-events (ivl > 0) change the live
+        # interval — a down port keeps its pre-outage interval, matching
+        # FailurePlan.port_ivl_at.  Where the interval changes on a live
+        # port, the analytic backlog rescales so the k-th queued packet's
+        # slot moves from t + k*old to t + k*new (exact integer math; the
+        # backlog is slot-uniform by induction).  last_svc is reset to
+        # t - new_ivl so a service at the event tick itself is legal.
+        applied = last >= 0
+        ivl_ev = fev_ivl[jnp.maximum(last, 0)]
+        new_ivl = jnp.where(applied & (ivl_ev > 0), ivl_ev, c.port_ivl)
+        resc = applied & new_up & (new_ivl != c.port_ivl)
+        backlog = jnp.maximum(q_tail0 - t, 0)
+        q_tail0 = jnp.where(
+            resc, t + _ceildiv(backlog * new_ivl, c.port_ivl), q_tail0)
+        cur_s = jnp.clip(cur0, 0, NP_ - 1)
+        presc = (pstate0 == P_QUEUED) & resc[cur_s]
+        rel = jnp.maximum(pevent0 - t, 0)
+        pevent0 = jnp.where(
+            presc,
+            t + _ceildiv(rel * new_ivl[cur_s], c.port_ivl[cur_s]),
+            pevent0)
+        last_svc = jnp.where(applied, t - new_ivl, c.last_svc)
+        return (new_up, new_ivl, last_svc, fail_idx, q_tail0, pstate0,
+                pevent0, trims0)
 
     def flow_sums_fn(pflow):
         """Per-flow sums as ONE one-hot GEMM instead of per-mask scatters
@@ -321,9 +372,13 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         t = t.astype(jnp.int32)
 
         # ------------- A0. failure timeline events (DESIGN.md §10) ----------
-        (port_up, fail_idx, q_tail0, pstate0, pevent0,
-         trims0) = apply_failure_events(c, t)
+        (port_up, port_ivl, last_svc, fail_idx, q_tail0, pstate0,
+         pevent0, trims0) = apply_failure_events(c, t)
 
+        # load signal fed to the sender-policy layer: ticks-to-drain, so a
+        # degraded port (interval > 1) advertises proportionally higher
+        # load for the same packet backlog — adaptive schemes steer away
+        # from brownouts through the same occ/ECN path as congestion.
         occ = jnp.maximum(q_tail0 - t, 0)
         if batched:
             scheme = lane.scheme
@@ -388,8 +443,18 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
 
         # conformance counter: a service event must never cross a down port
         # (the A0 kill rule + enqueue mask conspire to make this impossible)
-        viol = c.viol + jnp.sum((svc & ~port_up[
-            jnp.clip(cur_port, 0, NP_ - 1)]).astype(jnp.int32))
+        cur_s = jnp.clip(cur_port, 0, NP_ - 1)
+        viol = c.viol + jnp.sum((svc & ~port_up[cur_s]).astype(jnp.int32))
+        rviol = c.rviol
+        if HAS_RATE:
+            # rate audit: services on one port must be >= its scheduled
+            # interval apart — throughput never exceeds the scheduled rate
+            rviol = rviol + jnp.sum(
+                (svc & (t - last_svc[cur_s] < port_ivl[cur_s])
+                 ).astype(jnp.int32))
+            last_svc = jnp.concatenate(
+                [last_svc, jnp.full((1,), _NEVER_SVC, jnp.int32)]).at[
+                jnp.where(svc, cur_port, NP_)].max(t)[:NP_]
 
         ret = ret_ticks[c.pflow, c.ppath]
         pevent = jnp.where(deliver, t + ret, pevent0)
@@ -499,7 +564,16 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         rank = _enqueue_rank(cport)
 
         tail_e = q_tail0[jnp.minimum(cport, NP_ - 1)]
-        occ_at = jnp.maximum(tail_e - t, 0) + rank
+        if HAS_RATE:
+            # backlog in *packets* (buffer occupancy): ticks-to-drain
+            # divided by the port's service interval.  Trim/RED compare
+            # against packet thresholds (qsize/kmin/kmax), so a degraded
+            # port holds the same number of packets but drains slower.
+            ivl_e = port_ivl[jnp.minimum(cport, NP_ - 1)]
+            occ_at = _ceildiv(jnp.maximum(tail_e - t, 0), ivl_e) + rank
+        else:
+            ivl_e = None
+            occ_at = jnp.maximum(tail_e - t, 0) + rank
         trim = valid & (occ_at >= spec.qsize)
         accept = valid & ~(occ_at >= spec.qsize)
 
@@ -510,7 +584,12 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         pecn = pecn | jnp.zeros(N + 1, bool).at[
             jnp.where(mark, cidx_s, N)].set(True)[:N]
 
-        slot = jnp.maximum(tail_e, t) + rank + 1
+        if HAS_RATE:
+            # service slots stride by the interval: rank-k accept departs
+            # at max(tail, t) + (k+1)*ivl — rate 1/ivl by construction
+            slot = jnp.maximum(tail_e, t) + (rank + 1) * ivl_e
+        else:
+            slot = jnp.maximum(tail_e, t) + rank + 1
         # trimmed: header continues + NACK returns (priority, prop-only)
         nack_at = t + rem_ticks[jnp.minimum(cflow, F - 1), cpath,
                                 jnp.minimum(chop, rem_ticks.shape[2] - 1)]
@@ -527,14 +606,18 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         timeouts = c.timeouts + n_to
         delivered = c.delivered + n_ack
 
+        # q_tail advances by ticks-of-service added: ivl per accepted
+        # packet (1 at full rate — the pre-rate scalar bump)
         n_acc = jnp.zeros(NP_ + 1, jnp.int32).at[
-            jnp.where(accept, cport, NP_)].add(1)[:NP_]
+            jnp.where(accept, cport, NP_)].add(
+            1 if not HAS_RATE else ivl_e)[:NP_]
         q_tail = jnp.where(n_acc > 0, jnp.maximum(q_tail0, t) + n_acc,
                            q_tail0)
 
         return Carry(
             rng=c.rng, q_tail=q_tail,
-            port_up=port_up, fail_idx=fail_idx, viol=viol,
+            port_up=port_up, port_ivl=port_ivl, last_svc=last_svc,
+            fail_idx=fail_idx, viol=viol, rviol=rviol,
             pstate=pstate, pflow=pflow, ppath=ppath, phop=phop, pevent=pevent,
             pecn=pecn, pexp=pexp, psent=psent, ppsn=ppsn,
             next_seq=next_seq, acked=acked, retx_pend=retx_pend,
@@ -642,16 +725,22 @@ def init_carry(spec: SimSpec, seed: int = 0,
     # folding them here makes a t=0 plan bit-identical — including
     # steps_executed — to a static ``failed_links`` build.
     port_up0 = ~np.asarray(spec.port_failed, bool)
+    port_ivl0 = np.ones(spec.n_ports, np.int32)
+    ivl0 = _event_ivls(spec)
     n0 = int(np.searchsorted(spec.fail_event_tick, 0, side="right"))
     if n0:
         port_up0 = port_up0.copy()
         for i in range(n0):
             port_up0[spec.fail_event_port[i]] = bool(spec.fail_event_up[i])
+            if ivl0[i] > 0:
+                port_ivl0[spec.fail_event_port[i]] = int(ivl0[i])
     carry = Carry(
         rng=jax.random.PRNGKey(seed),
         q_tail=jnp.zeros(spec.n_ports, jnp.int32),
         port_up=jnp.asarray(port_up0),
-        fail_idx=jnp.int32(n0), viol=jnp.int32(0),
+        port_ivl=jnp.asarray(port_ivl0),
+        last_svc=jnp.full(spec.n_ports, _NEVER_SVC, jnp.int32),
+        fail_idx=jnp.int32(n0), viol=jnp.int32(0), rviol=jnp.int32(0),
         pstate=jnp.zeros(N, jnp.int32), pflow=jnp.zeros(N, jnp.int32),
         ppath=jnp.zeros(N, jnp.int32), phop=jnp.zeros(N, jnp.int32),
         pevent=jnp.zeros(N, jnp.int32), pecn=jnp.zeros(N, bool),
@@ -765,6 +854,7 @@ def _result(carry: Carry, t, steps) -> SimResult:
         ticks_simulated=int(t),
         steps_executed=int(steps),
         down_violations=int(carry.viol),
+        rate_violations=int(carry.rviol),
     )
 
 

@@ -48,26 +48,37 @@ def _empty_bool() -> np.ndarray:
 
 @dataclasses.dataclass
 class FailurePlan:
-    """Time-scheduled port up/down events (DESIGN.md §10).
+    """Time-scheduled port capacity events (DESIGN.md §10).
 
-    Sorted by ``event_tick`` (stable in declaration order for ties — the
-    last event at a tick wins per port).  Events at tick <= 0 are initial
-    conditions: the engine folds them into the starting ``port_up`` mask,
-    so a plan whose down-events all fire at t=0 is bit-identical to a
-    static ``failed_links`` build.  Usually produced by
+    Each event sets one port's *service interval* ``event_ivl``: ticks
+    per serviced packet.  ``0`` means the port is down, ``1`` is full
+    rate, ``k`` is rate ``1/k`` of line rate — so a binary up/down
+    timeline is the ``ivl ∈ {0, 1}`` special case and ``port_up`` is
+    always exactly ``event_ivl > 0``.  Sorted by ``event_tick`` (stable
+    in declaration order for ties — the last event at a tick wins per
+    port).  Events at tick <= 0 are initial conditions: the engine folds
+    them into the starting ``port_up``/``port_ivl`` state, so a plan
+    whose down-events all fire at t=0 is bit-identical to a static
+    ``failed_links`` build.  Usually produced by
     :class:`repro.net.sim.failures.FailureSchedule`, not by hand.
     """
 
     event_tick: np.ndarray           # [E] i32, sorted ascending
     port_id: np.ndarray              # [E] i32
     port_up: np.ndarray              # [E] bool (True = link recovers)
+    event_ivl: np.ndarray | None = None  # [E] i32 ticks/packet (0 = down);
+    #   synthesized from port_up (up -> 1, down -> 0) when omitted, so
+    #   pre-rate callers keep the three-array constructor.
 
     def __post_init__(self):
         self.event_tick = np.asarray(self.event_tick, np.int32)
         self.port_id = np.asarray(self.port_id, np.int32)
         self.port_up = np.asarray(self.port_up, bool)
+        if self.event_ivl is None:
+            self.event_ivl = np.where(self.port_up, 1, 0).astype(np.int32)
+        self.event_ivl = np.asarray(self.event_ivl, np.int32)
         if not (len(self.event_tick) == len(self.port_id)
-                == len(self.port_up)):
+                == len(self.port_up) == len(self.event_ivl)):
             raise ValueError("FailurePlan arrays must share one length")
         if len(self.event_tick) and (np.diff(self.event_tick) < 0).any():
             raise ValueError("FailurePlan events must be sorted by tick")
@@ -75,10 +86,21 @@ class FailurePlan:
             raise ValueError("FailurePlan event ticks must be >= 0")
         if len(self.port_id) and (self.port_id < 0).any():
             raise ValueError("FailurePlan port ids must be >= 0")
+        if len(self.event_ivl) and (self.event_ivl < 0).any():
+            raise ValueError("FailurePlan intervals must be >= 0")
+        if len(self.event_ivl) and \
+                ((self.event_ivl > 0) != self.port_up).any():
+            raise ValueError("FailurePlan port_up must equal event_ivl > 0")
 
     @property
     def n_events(self) -> int:
         return len(self.event_tick)
+
+    @property
+    def has_rate_events(self) -> bool:
+        """True when any event sets a *degraded* (not binary) rate — the
+        engine only traces the rate machinery for such plans."""
+        return bool((self.event_ivl > 1).any())
 
     def port_state_at(self, t: int, n_ports: int,
                       initial: np.ndarray | None = None) -> np.ndarray:
@@ -91,6 +113,28 @@ class FailurePlan:
                 break
             up[self.port_id[i]] = bool(self.port_up[i])
         return up
+
+    def port_ivl_at(self, t: int, n_ports: int,
+                    initial: np.ndarray | None = None) -> np.ndarray:
+        """Host-side oracle: per-port service interval *during* tick
+        ``t`` (events at tick <= t applied, in order).  A down port
+        keeps its pre-outage interval — the up/down axis is
+        ``port_state_at``; this is the live-rate axis."""
+        ivl = (np.ones(n_ports, np.int32) if initial is None
+               else np.asarray(initial, np.int32).copy())
+        for i in range(self.n_events):
+            if self.event_tick[i] > t:
+                break
+            if self.event_ivl[i] > 0:
+                ivl[self.port_id[i]] = int(self.event_ivl[i])
+        return ivl
+
+    def port_rate_at(self, t: int, n_ports: int) -> np.ndarray:
+        """Host-side oracle: scheduled per-port rate (fraction of line
+        rate) during tick ``t`` — 0.0 for a down port, else ``1/ivl``."""
+        up = self.port_state_at(t, n_ports)
+        ivl = self.port_ivl_at(t, n_ports)
+        return np.where(up, 1.0 / np.maximum(ivl, 1), 0.0)
 
 
 @dataclasses.dataclass
@@ -142,6 +186,10 @@ class SimSpec:
         default_factory=_empty_i32)  # [E] i32
     fail_event_up: np.ndarray = dataclasses.field(
         default_factory=_empty_bool)  # [E] bool
+    fail_event_ivl: np.ndarray = dataclasses.field(
+        default_factory=_empty_i32)  # [E] i32 ticks/packet (0 = down); may
+    #   be left empty by pre-rate callers — the engine then derives the
+    #   binary encoding (up -> 1, down -> 0) from fail_event_up
 
     # spritz
     explore_threshold: int = 44
@@ -181,6 +229,11 @@ class SimResult(NamedTuple):
     # The kill rule + enqueue mask must keep this at exactly 0; the
     # failover property suite asserts it.
     down_violations: int = 0
+    # conformance counter (DESIGN.md §10): services spaced closer than a
+    # port's scheduled interval (i.e. throughput above the scheduled
+    # rate).  The analytic slot math must keep this at exactly 0; the
+    # capacity-schedule property suite asserts it.
+    rate_violations: int = 0
 
     @property
     def compression(self) -> float:

@@ -1,0 +1,337 @@
+"""Time-varying link-capacity conformance suite (DESIGN.md §10).
+
+The capacity timeline generalizes the binary failure timeline: every
+port carries a live service interval (ticks per packet; 0 = down, 1 =
+full rate, k = rate 1/k).  This module pins the contract's corners:
+
+* builder semantics + validation (rates, drains, tenants, dedup);
+* the **bit-identity** anchor: an all-``rate=0`` schedule compiles to
+  the identical arrays a ``fail_links`` plan emits and produces the
+  identical engine results — including ``steps_executed`` — in BOTH
+  engines (packet + flow-level);
+* the service-rate audit: ``rate_violations == 0`` across the whole
+  registered scheme sweep and, under ``hypothesis``, across arbitrary
+  randomized rate schedules (with packet conservation);
+* ``chaos_schedule`` determinism and its settle contract.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (DESIGN.md §7): only @given tests
+    from conftest import hyp_stubs  # skip; the rest of the module runs
+    given, settings, st = hyp_stubs()
+
+from repro.fabric import flowsim as FS
+from repro.net.policies import registry as REG
+from repro.net.sim import build as B
+from repro.net.sim import engine as E
+from repro.net.sim.failures import (MAX_IVL, FailureSchedule, all_links,
+                                    chaos_schedule, ivl_to_rate, rate_to_ivl,
+                                    sample_links)
+from repro.net.sim.types import ECMP, OPS_U, SCOUT, SPRAY_U, SPRAY_W
+from repro.net.topology.base import BYTES_PER_TICK
+from repro.net.topology.dragonfly import make_dragonfly
+
+from test_failures import _conservation
+
+DF = make_dragonfly(4, 2, 2)
+
+
+def _links(topo, n=4, seed=3):
+    return sample_links(topo, n, seed=seed)
+
+
+def _same_result(a, b):
+    import dataclasses as _dc
+    names = (a._fields if hasattr(a, "_fields")
+             else [f.name for f in _dc.fields(a)])
+    for name in names:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=f"field {name} differs")
+
+
+# ---------------------------------------------------------- quantization --
+def test_rate_quantization_roundtrip():
+    assert rate_to_ivl(0.0) == 0 and ivl_to_rate(0) == 0.0
+    assert rate_to_ivl(1.0) == 1
+    assert rate_to_ivl(0.25) == 4 and ivl_to_rate(4) == 0.25
+    assert rate_to_ivl(0.3) == 3          # nearest interval
+    with pytest.raises(ValueError, match=r"within \[0, 1\]"):
+        rate_to_ivl(1.5)
+    with pytest.raises(ValueError, match="use rate=0"):
+        rate_to_ivl(1.0 / (4 * MAX_IVL))
+
+
+# -------------------------------------------------------------- builders --
+def test_set_rate_emits_interval_events_both_directions():
+    u, v = 0, int(DF.nbr[0, 0])
+    plan = FailureSchedule(DF).set_rate(64, [(u, v)], 0.25).compile()
+    assert plan.n_events == 2
+    assert (plan.event_ivl == 4).all()
+    assert plan.port_up.all()             # degraded, NOT down
+    assert plan.has_rate_events
+    # oracle: rate 0.25 during the window, full rate before
+    rates = plan.port_rate_at(64, DF.n_ports)
+    for p in plan.port_id:
+        assert rates[p] == 0.25
+    assert (plan.port_rate_at(63, DF.n_ports) == 1.0).all()
+
+
+def test_degrade_until_and_recover_cover_degraded_ports():
+    links = _links(DF, 2)
+    plan = (FailureSchedule(DF)
+            .degrade_links(100, links, 0.5, until=400).compile())
+    assert (plan.port_rate_at(100, DF.n_ports) <= 1.0).all()
+    assert (plan.port_rate_at(400, DF.n_ports) == 1.0).all()
+    # generalized recover() picks up degraded (not just down) ports
+    plan2 = (FailureSchedule(DF).set_rate(100, links, 0.5)
+             .recover(900).compile())
+    assert (plan2.port_rate_at(900, DF.n_ports) == 1.0).all()
+    assert (plan2.port_rate_at(899, DF.n_ports) < 1.0).any()
+    with pytest.raises(ValueError, match="must be > at"):
+        FailureSchedule(DF).degrade_links(100, links, 0.5, until=100)
+
+
+def test_oversubscribe_and_tenant_map_to_rates():
+    link = [(0, int(DF.nbr[0, 0]))]
+    p = FailureSchedule(DF).oversubscribe(10, link, 4.0).compile()
+    assert (p.event_ivl == 4).all()       # 4:1 taper -> 1/4 rate
+    p = FailureSchedule(DF).background_tenant(10, link, 0.75).compile()
+    assert (p.event_ivl == 4).all()       # tenant takes 3/4 -> 1/4 left
+    with pytest.raises(ValueError, match="factor"):
+        FailureSchedule(DF).oversubscribe(10, link, 0.5)
+    with pytest.raises(ValueError, match="share"):
+        FailureSchedule(DF).background_tenant(10, link, 1.0)
+
+
+def test_drain_switch_ramps_down_then_recovers():
+    sched = FailureSchedule(DF).drain_switch(100, 3, over=300, steps=4,
+                                             until=1000)
+    plan = sched.compile()
+    ports = FailureSchedule(DF)._switch_ports(3)
+    rate_seq = [plan.port_rate_at(t, DF.n_ports)[ports[0]]
+                for t in (99, 100, 200, 300, 400, 1000)]
+    assert rate_seq[0] == 1.0
+    # monotone non-increasing ramp, fully down at at+over, back at until
+    assert all(a >= b for a, b in zip(rate_seq[1:4], rate_seq[2:5]))
+    assert rate_seq[4] == 0.0 and rate_seq[5] == 1.0
+    # over=0 degenerates to fail_switch
+    p0 = FailureSchedule(DF).drain_switch(50, 3).compile()
+    pf = FailureSchedule(DF).fail_switch(50, 3).compile()
+    _same_result(p0, pf)
+
+
+# ---------------------------------------------- validation (satellite 1) --
+def test_unknown_link_and_switch_raise_with_names():
+    nbrs = {int(x) for x in DF.nbr[0] if x >= 0}
+    bad = next(v for v in range(1, DF.n_switches) if v not in nbrs)
+    with pytest.raises(ValueError,
+                       match=f"no link between switches 0 and {bad}"):
+        FailureSchedule(DF).fail_links(0, [(0, bad)])
+    with pytest.raises(ValueError, match=r"switch -1 out of range"):
+        FailureSchedule(DF).fail_links(0, [(-1, 2)])
+    with pytest.raises(ValueError, match=r"switch 99 out of range"):
+        FailureSchedule(DF).fail_switch(0, 99)
+    with pytest.raises(ValueError, match="out of range"):
+        FailureSchedule(DF).set_port_ivl(0, [DF.n_ports + 3], 1)
+    with pytest.raises(ValueError, match="interval"):
+        FailureSchedule(DF).set_port_ivl(0, [0], MAX_IVL + 1)
+    with pytest.raises(ValueError, match=">= 0"):
+        FailureSchedule(DF).set_port_ivl(-5, [0], 1)
+
+
+# ---------------------------------------------------- dedup (satellite 2) --
+def test_compile_dedups_same_tick_port_last_write_wins():
+    link = [(0, int(DF.nbr[0, 0]))]
+    sched = (FailureSchedule(DF)
+             .fail_links(50, link)          # first declaration: down
+             .set_rate(50, link, 0.5)       # redeclared: rate 1/2
+             .recover_links(50, link))      # last wins: full rate
+    plan = sched.compile()
+    assert plan.n_events == 2               # one event per port, not 6
+    assert (plan.event_ivl == 1).all()
+    # deterministic canonical order: sorted by (tick, port)
+    order = list(zip(plan.event_tick.tolist(), plan.port_id.tolist()))
+    assert order == sorted(order)
+    # later ticks survive the dedup untouched
+    sched.fail_links(80, link)
+    plan2 = sched.compile()
+    assert plan2.n_events == 4
+    assert not plan2.port_state_at(80, DF.n_ports).all()
+
+
+# ------------------------------------------- bit-identity (ISSUE anchor) --
+def test_rate_zero_plan_is_bit_identical_to_fail_links_packet_engine():
+    """rate=0 IS the binary down event: identical compiled arrays,
+    identical SimResult — including steps_executed — so existing binary
+    plans can never drift under the rate machinery."""
+    links = _links(DF, 3)
+    p_rate = (FailureSchedule(DF).set_rate(60, links, 0.0)
+              .set_rate(2500, links, 1.0).compile())
+    p_bin = (FailureSchedule(DF).fail_links(60, links)
+             .recover_links(2500, links).compile())
+    _same_result(p_rate, p_bin)
+
+    flows = [B.Flow(e, 40 + (e % 3), 96, start_tick=8 * e)
+             for e in range(5)]
+    specs = [B.build_spec(DF, flows, SPRAY_W, n_ticks=1 << 13,
+                          failure_plan=p, block_ticks=1024)
+             for p in (p_rate, p_bin)]
+    res = [E.run(s, seed=0) for s in specs]
+    assert res[0].steps_executed == res[1].steps_executed
+    _same_result(res[0], res[1])
+    assert res[0].rate_violations == 0
+
+
+def test_rate_zero_plan_is_bit_identical_in_flow_engine():
+    topo = make_dragonfly(4, 2, 2)
+    rng = np.random.default_rng(0)
+    eps = rng.choice(topo.n_endpoints, 10, replace=False)
+    flows = [FS.FlowSpec(int(eps[i]), int(eps[i + 5]), 2e5)
+             for i in range(5)]
+    links = _links(topo, 3)
+    horizon = max(4, int(2e5 / BYTES_PER_TICK))   # solo FCT in ticks
+    p_rate = (FailureSchedule(topo).set_rate(horizon // 4, links, 0.0)
+              .recover(horizon * 16).compile())
+    p_bin = (FailureSchedule(topo).fail_links(horizon // 4, links)
+             .recover(horizon * 16).compile())
+    out = [FS.simulate_batch(topo, flows, ["ecmp", "spritz_spray_w"],
+                             seeds=[0], failure_plan=p, max_paths=16)
+           for p in (p_rate, p_bin)]
+    for name in ("ecmp", "spritz_spray_w"):
+        a, b = out[0][name][0], out[1][name][0]
+        np.testing.assert_array_equal(a.fct, b.fct)
+        assert (a.epochs, a.reselections, a.forced, a.rate_violations) \
+            == (b.epochs, b.reselections, b.forced, b.rate_violations)
+        assert a.rate_violations == 0
+
+
+# --------------------------------------------------- degraded semantics --
+def test_flow_level_brownout_throttles_exactly():
+    """All links at rate 1/4 from t=0 with no contention -> FCTs exactly
+    4x the healthy run, and the allocation audit stays clean."""
+    topo = make_dragonfly(4, 2, 2)
+    flows = [FS.FlowSpec(0, 40, 1e5)]
+    plan = (FailureSchedule(topo)
+            .set_rate(0, all_links(topo), 0.25)
+            .set_port_ivl(0, [topo.delivery_port(40)], 4).compile())
+    healthy = FS.simulate(topo, flows, "ecmp", seed=0)
+    degraded = FS.simulate(topo, flows, "ecmp", seed=0, failure_plan=plan)
+    assert degraded.rate_violations == 0
+    np.testing.assert_allclose(degraded.fct, healthy.fct * 4, rtol=1e-9)
+
+
+def test_packet_engine_degraded_run_is_clean_and_slower():
+    flows = [B.Flow(e, 40 + (e % 3), 96, start_tick=8 * e)
+             for e in range(5)]
+    links = _links(DF, 4)
+    plan = FailureSchedule(DF).degrade_links(60, links, 0.25, until=6000)
+    spec = B.build_spec(DF, flows, SCOUT, n_ticks=1 << 14,
+                        failure_plan=plan, block_ticks=1024)
+    res, state = E.run(spec, return_carry=True, seed=0)
+    assert res.done.all()
+    assert res.rate_violations == 0 and res.down_violations == 0
+    _conservation(res, state)
+    # the live interval vector matches the host oracle at the last tick
+    plan_c = plan.compile()
+    want = plan_c.port_ivl_at(res.ticks_simulated, DF.n_ports)
+    np.testing.assert_array_equal(state["port_ivl"], want)
+
+
+# ------------------------------------------- registry conformance sweep --
+CONF_FLOWS = [B.Flow(e, 40 + (e % 3), 96, start_tick=8 * e)
+              for e in range(5)]
+
+
+@pytest.fixture(scope="module")
+def policy_degraded_runs():
+    """One batched program: every registered scheme through one
+    brownout+outage mix (a new registry scheme joins with no edit)."""
+    sched = (FailureSchedule(DF)
+             .degrade_links(60, _links(DF, 3), 0.25)
+             .fail_links(500, _links(DF, 2, seed=9))
+             .recover(2500))
+    base = B.build_spec(DF, CONF_FLOWS, SPRAY_W, n_ticks=1 << 13,
+                        failure_plan=sched, block_ticks=1024)
+    names = [p.name for p in REG.all_policies()]
+    results, states = E.run_batch(base, schemes=names, seeds=[0],
+                                  return_carry=True)
+    return dict(zip(names, zip(results, states)))
+
+
+@pytest.mark.parametrize("name", [p.name for p in REG.all_policies()])
+def test_policy_degraded_conformance(name, policy_degraded_runs):
+    res, state = policy_degraded_runs[name]
+    assert res.rate_violations == 0
+    assert res.down_violations == 0
+    _conservation(res, state)
+    assert state["inj_cnt"].sum() > 0
+
+
+# ------------------------------------------------------- chaos generator --
+def test_chaos_schedule_is_seed_deterministic_and_settles():
+    a = chaos_schedule(DF, horizon=4096, seed=42).compile()
+    b = chaos_schedule(DF, horizon=4096, seed=42).compile()
+    _same_result(a, b)
+    c = chaos_schedule(DF, horizon=4096, seed=43).compile()
+    assert a.n_events != c.n_events or not np.array_equal(
+        a.event_tick, c.event_tick) or not np.array_equal(
+        a.event_ivl, c.event_ivl)
+    # settle contract: fully healthy from settle_frac * horizon on
+    assert (a.event_tick <= 2048).all()
+    assert a.port_state_at(2048, DF.n_ports).all()
+    assert (a.port_rate_at(2048, DF.n_ports) == 1.0).all()
+    with pytest.raises(ValueError, match="horizon"):
+        chaos_schedule(DF, horizon=4, seed=0)
+
+
+def test_chaos_schedule_runs_clean_through_packet_engine():
+    plan = chaos_schedule(DF, horizon=2048, seed=7)
+    spec = B.build_spec(DF, CONF_FLOWS, SPRAY_U, n_ticks=1 << 14,
+                        failure_plan=plan, block_ticks=512)
+    res, state = E.run(spec, return_carry=True, seed=0)
+    assert res.done.all()
+    assert res.rate_violations == 0 and res.down_violations == 0
+    _conservation(res, state)
+
+
+# ------------------------------------------------------ property suite --
+@settings(max_examples=5, deadline=None)
+@given(st.data())
+def test_random_rate_schedules_conserve_packets_and_respect_rates(data):
+    """Hypothesis: under arbitrary mixed rate/outage timelines (1) no
+    port is ever serviced faster than its scheduled interval
+    (``rate_violations == 0``), (2) no service crosses a down port, and
+    (3) every injected packet is accounted for."""
+    scheme = data.draw(st.sampled_from([ECMP, OPS_U, SCOUT, SPRAY_U]),
+                       label="scheme")
+    n_links = data.draw(st.integers(1, 6), label="n_links")
+    seed = data.draw(st.integers(0, 2**16), label="link_seed")
+    links = _links(DF, n_links, seed=seed)
+    sched = FailureSchedule(DF)
+    t = 0
+    for _ in range(data.draw(st.integers(1, 4), label="n_waves")):
+        t += data.draw(st.integers(0, 800), label="gap")
+        k = data.draw(st.integers(1, n_links), label="wave_size")
+        rate = data.draw(st.sampled_from([0.0, 0.125, 0.25, 0.5, 1.0]),
+                         label="rate")
+        sched.set_rate(t, links[:k], rate)
+        if data.draw(st.booleans(), label="recovers"):
+            t += data.draw(st.integers(1, 800), label="window")
+            sched.recover(t)
+    flows = [B.Flow(e, 40 + (e % 3), 96, start_tick=8 * e)
+             for e in range(5)]
+    spec = B.build_spec(DF, flows, scheme, n_ticks=1 << 13,
+                        failure_plan=sched, block_ticks=1024)
+    res, state = E.run(spec, return_carry=True)
+    assert res.rate_violations == 0
+    assert res.down_violations == 0
+    _conservation(res, state)
+    # live rate vector matches the host oracle at the final tick
+    plan = sched.compile()
+    np.testing.assert_array_equal(
+        state["port_ivl"],
+        plan.port_ivl_at(res.ticks_simulated, DF.n_ports))

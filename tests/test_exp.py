@@ -80,7 +80,8 @@ def test_workload_and_failure_builders_known():
                 cell.cell_id
         elif cell.engine == "flow":
             assert cell.workload in ("train", "alltoall"), cell.cell_id
-            assert cell.failure in (None, "loaded_midrun"), cell.cell_id
+            assert cell.failure in (None, "loaded_midrun",
+                                    "loaded_degraded", "chaos"), cell.cell_id
 
 
 # ------------------------------------------------------- schema + hashing

@@ -151,6 +151,25 @@ def _cells() -> list[Cell]:
         ),
     ]
 
+    # paper-scale PACKET-engine cells (DESIGN.md §14): the 1056-endpoint
+    # Dragonfly (smoke+ci) and 1134-endpoint Slim Fly (ci) run through
+    # the exact packet engine itself — its occupancy-bounded carry and
+    # sparse rank/aggregation paths, not the flow-level abstraction.
+    # Guards are counters and in-session ratios only; wall time is
+    # recorded, never gated.
+    for topo, tiers in (("dragonfly1056", ("smoke", "ci")),
+                        ("slimfly1134", ("ci",))):
+        cells.append(Cell(
+            cell_id=f"engine.{topo}.permutation.quick",
+            figure="engine_perf", bench="engine", engine="packet",
+            topology=topo, scale="quick", workload="permutation",
+            workload_kw={"size_pkts": 32, "seed": 1},
+            schemes=("ecmp", "ugal_l", SPRITZ_W), n_ticks=1 << 14,
+            tiers=tiers,
+            guards=(_G_NO_DOWN,
+                    _g_counter("done_frac", ">=", 0.99),
+                    _g_ratio("fct_mean_us", SPRITZ_W, "ecmp", 1.0))))
+
     # ------------------------------------------------- chaos tier:
     # additional recorded seeds per topology (nightly re-rolls more via
     # --chaos-seeds; derived cells keep these guards)
@@ -366,6 +385,23 @@ def _cells() -> list[Cell]:
         guards=(_G_NO_RATE,
                 _g_counter("done_frac", ">=", 0.999, scheme=SPRITZ_W),
                 _g_ratio("fct_us", SPRITZ_W, "ecmp", 1.0)),
+    ))
+    # cross-engine validation (DESIGN.md §14): the same DF-1056 train
+    # flow set through BOTH the flow-level and the packet engine, with
+    # the per-scheme packet/flow mean-FCT ratio banded — the two
+    # abstraction levels must agree within a calibrated factor
+    cells.append(Cell(
+        cell_id="fabric.dragonfly1056.cross.full",
+        figure="fabric_scale", bench="fabric", engine="cross",
+        topology="dragonfly1056", scale="quick", workload="train",
+        workload_kw={"n_chips": 256, "tp": 16, "shard": 1e6},
+        schemes=FLOW_SMOKE_SCHEMES, n_ticks=1 << 16,
+        tiers=("full",),
+        guards=(_G_NO_DOWN, _G_NO_RATE,
+                _g_counter("flow_done_frac", ">=", 0.99),
+                _g_counter("packet_done_frac", ">=", 0.99),
+                _g_counter("xratio", ">=", 0.5),
+                _g_counter("xratio", "<=", 2.0)),
     ))
     cells.append(Cell(
         cell_id="fabric.dragonfly1056.chaos.quick",

@@ -77,6 +77,10 @@ def _execute(cell, schemes, verbose):
         from repro.exp.flow import run_flow_cell
         return run_flow_cell(cell, schemes, list(cell.seeds),
                              verbose=verbose)
+    if cell.engine == "cross":
+        from repro.exp.cross import run_cross_cell
+        return run_cross_cell(cell, schemes, list(cell.seeds),
+                              verbose=verbose)
     from repro.exp.host import run_host_cell
     return run_host_cell(cell, schemes, list(cell.seeds), verbose=verbose)
 
@@ -173,13 +177,16 @@ def run(tier: str | None = None, cells=None, bench: str | None = None,
         selected = chaos_seed_cells(selected, chaos_seeds)
     if schemes is not None or seeds is not None or scale is not None:
         # a scale override only applies where the engine's topology
-        # table understands it (e.g. --scale mid leaves flow cells —
-        # always paper-scale instances — at their registered scale)
+        # table understands BOTH the requested and the registered scale
+        # (e.g. --scale mid leaves flow cells and the paper-instance
+        # "quick" packet cells at their registered scale)
         from repro.exp.spec import SCALES_BY_ENGINE
         selected = [
             c.with_overrides(
                 schemes=schemes, seeds=seeds,
-                scale=scale if scale in SCALES_BY_ENGINE[c.engine] else None)
+                scale=scale if (scale in SCALES_BY_ENGINE[c.engine]
+                                and c.scale in SCALES_BY_ENGINE[c.engine])
+                else None)
             for c in selected]
     results = [run_cell(c, out=out, force=force, verbose=verbose)
                for c in selected]

@@ -23,16 +23,23 @@ from typing import Any, Mapping
 TIERS = ("smoke", "ci", "chaos", "full")
 
 # engine dispatch kinds: "packet" = engine.run_batch, "flow" =
-# flowsim.simulate_batch, "host" = host-side analytic cells (path/memory
-# model — no simulator run).
-ENGINES = ("packet", "flow", "host")
+# flowsim.simulate_batch, "cross" = the same flow set through BOTH
+# engines with per-scheme cross-engine FCT ratios (DESIGN.md §14),
+# "host" = host-side analytic cells (path/memory model — no simulator
+# run).
+ENGINES = ("packet", "flow", "cross", "host")
 
 # scales a CLI --scale override may retarget per engine.  Packet/host
-# scale picks only the topology size; flow cells' "quick"/"full" is
-# entangled with their chip/shard workload_kw, so they are never
-# retargeted — select the registered quick or full cell instead.
+# scale picks only the topology size; flow and cross cells'
+# "quick"/"full" is entangled with their chip/shard workload_kw, so they
+# are never retargeted — select the registered quick or full cell
+# instead.  A cell whose own scale is outside its engine's table (e.g.
+# the paper-instance "quick" packet cells on dragonfly1056) is likewise
+# pinned: the runner only retargets when both the requested and the
+# registered scale are listed here.
 SCALES_BY_ENGINE = {"packet": ("small", "mid", "full"),
                     "flow": (),
+                    "cross": (),
                     "host": ("small", "mid", "full")}
 
 RESULT_SCHEMA_VERSION = 1

@@ -1,0 +1,80 @@
+"""Per-flow aggregation (one-hot GEMM) as a Pallas TPU kernel.
+
+The packet engine folds K per-packet indicator/value rows into per-flow
+sums every tick (feedback counts, delivery PSNs — engine.py
+``flow_sums_fn``).  The jnp fast path materializes the full [N, F]
+one-hot operand for one GEMM, which blows the one-hot cell budget at
+paper scale (N x F ~ 3.6e7 for DF-1056); the scatter fallback walks
+updates serially on CPU.  This kernel streams the packet table in blocks
+and accumulates ``rows_block @ onehot_block`` into the [K, F] output —
+the same MXU-friendly GEMM, without ever materializing [N, F].
+
+Grid is 1-D over packet blocks, executed sequentially; the output block
+maps every iteration to the same [K, F] tile, zero-initialized at block 0
+and accumulated in f32.  All engine inputs are small non-negative
+integers (< 2^24), so f32 accumulation is exact and the result is cast
+back to int32.  Oracle: ``ref.flow_agg_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flow_agg_kernel(rows_ref, pflow_ref, out_ref, *, n_flows):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    rows = rows_ref[...].astype(jnp.float32)                   # [K, bn]
+    pf = pflow_ref[...]                                        # [bn]
+    oh = (pf[:, None]
+          == jnp.arange(n_flows, dtype=jnp.int32)[None, :]
+          ).astype(jnp.float32)                                # [bn, F]
+    out_ref[...] += rows @ oh
+
+
+@functools.partial(jax.jit, static_argnames=("n_flows", "block_n",
+                                             "interpret"))
+def flow_agg(rows, pflow, *, n_flows: int, block_n: int = 1024,
+             interpret: bool = True):
+    """rows: [K, N] integer-valued; pflow: [N] i32 flow id per packet slot.
+    Returns [K, n_flows] i32: ``out[k, f] = sum(rows[k, pflow == f])``.
+    Entries with ``pflow`` outside [0, n_flows) contribute nowhere."""
+    if rows.ndim != 2:
+        raise ValueError(f"rows must be 2-D [K, N], got shape {rows.shape}")
+    if pflow.ndim != 1:
+        raise ValueError(f"pflow must be 1-D, got shape {pflow.shape}")
+    if rows.shape[1] != pflow.shape[0]:
+        raise ValueError(
+            f"rows/pflow length mismatch: {rows.shape[1]} vs "
+            f"{pflow.shape[0]}")
+    if pflow.dtype != jnp.int32:
+        raise ValueError(f"pflow must be int32, got {pflow.dtype}")
+    if n_flows < 1:
+        raise ValueError(f"n_flows must be >= 1, got {n_flows}")
+    K, N = rows.shape
+    block_n = min(block_n, N)
+    padN = (N + block_n - 1) // block_n * block_n
+    if padN != N:
+        # pad flow id n_flows one-hots to an all-zero row: no contribution
+        rows = jnp.pad(rows, ((0, 0), (0, padN - N)))
+        pflow = jnp.pad(pflow, (0, padN - N), constant_values=n_flows)
+    grid = (padN // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_flow_agg_kernel, n_flows=n_flows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, block_n), lambda i: (0, i)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((K, n_flows), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, n_flows), jnp.float32),
+        interpret=interpret,
+    )(rows, pflow)
+    return out.astype(jnp.int32)

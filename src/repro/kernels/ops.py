@@ -49,3 +49,19 @@ def red_ecn(eport, rank, enq, unif, q_tail, t, *, qsize, kmin, kmax,
     return _red(eport, rank, enq, unif, q_tail, t, qsize=qsize, kmin=kmin,
                 kmax=kmax, n_ports=n_ports, block_n=block_n,
                 interpret=interpret)
+
+
+def tick_rank(port, *, n_ports, block_m=512, interpret=None):
+    from repro.kernels.tick_rank import tick_rank as _rank
+    if interpret is None:
+        interpret = _default_interpret()
+    return _rank(port, n_ports=n_ports, block_m=block_m,
+                 interpret=interpret)
+
+
+def flow_agg(rows, pflow, *, n_flows, block_n=1024, interpret=None):
+    from repro.kernels.flow_agg import flow_agg as _agg
+    if interpret is None:
+        interpret = _default_interpret()
+    return _agg(rows, pflow, n_flows=n_flows, block_n=block_n,
+                interpret=interpret)

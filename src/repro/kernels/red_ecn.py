@@ -61,10 +61,28 @@ def red_ecn(eport, rank, enq, unif, q_tail, t, *, qsize: int, kmin: float,
     """eport/rank: [N] i32; enq: [N] bool; unif: [N] f32; q_tail: [P] i32.
 
     Returns (occ [N] i32, trim [N] bool, mark [N] bool, slot [N] i32)."""
+    if not (eport.ndim == rank.ndim == enq.ndim == unif.ndim == 1):
+        raise ValueError("eport/rank/enq/unif must be 1-D")
+    if not (eport.shape == rank.shape == enq.shape == unif.shape):
+        raise ValueError(
+            f"ragged inputs: eport {eport.shape}, rank {rank.shape}, "
+            f"enq {enq.shape}, unif {unif.shape}")
+    if eport.dtype != jnp.int32 or rank.dtype != jnp.int32:
+        raise ValueError(
+            f"eport/rank must be int32, got {eport.dtype}/{rank.dtype}")
+    if q_tail.shape != (n_ports,):
+        raise ValueError(
+            f"q_tail shape {q_tail.shape} != (n_ports,) = ({n_ports},)")
     N = eport.shape[0]
     block_n = min(block_n, N)
-    assert N % block_n == 0, (N, block_n)
-    grid = (N // block_n,)
+    padN = (N + block_n - 1) // block_n * block_n
+    if padN != N:
+        # pads carry enq=False: occ/slot garbage is masked and sliced off
+        eport = jnp.pad(eport, (0, padN - N), constant_values=n_ports)
+        rank = jnp.pad(rank, (0, padN - N))
+        enq = jnp.pad(enq, (0, padN - N), constant_values=False)
+        unif = jnp.pad(unif, (0, padN - N))
+    grid = (padN // block_n,)
 
     kern = functools.partial(_red_ecn_kernel, qsize=qsize,
                              kmin=kmin, kmax=kmax, n_ports=n_ports)
@@ -87,11 +105,11 @@ def red_ecn(eport, rank, enq, unif, q_tail, t, *, qsize: int, kmin: float,
             pl.BlockSpec((block_n,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((N,), jnp.int32),
-            jax.ShapeDtypeStruct((N,), jnp.bool_),
-            jax.ShapeDtypeStruct((N,), jnp.bool_),
-            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((padN,), jnp.int32),
+            jax.ShapeDtypeStruct((padN,), jnp.bool_),
+            jax.ShapeDtypeStruct((padN,), jnp.bool_),
+            jax.ShapeDtypeStruct((padN,), jnp.int32),
         ],
         interpret=interpret,
     )(eport, rank, enq, unif, q_tail, t_arr)
-    return occ, trim, mark, slot
+    return occ[:N], trim[:N], mark[:N], slot[:N]

@@ -60,6 +60,26 @@ def red_ecn_reference(eport, rank, enq, unif, q_tail, t, *, qsize, kmin,
     return occ, trim, mark, jnp.where(accept, slot, 0)
 
 
+def tick_rank_reference(port, *, n_ports: int):
+    """Oracle for kernels.tick_rank: position among equal port values,
+    ordered by index (a stable segmented rank).  Entries outside
+    ``[0, n_ports)`` share one overflow bucket (engine callers mask
+    them out)."""
+    port_c = jnp.where((port < 0) | (port >= n_ports), n_ports, port)
+    oh = port_c[:, None] == jnp.arange(n_ports + 1, dtype=jnp.int32)[None, :]
+    pos = jnp.cumsum(oh.astype(jnp.int32), axis=0) * oh
+    return jnp.maximum(pos.sum(-1) - 1, 0).astype(jnp.int32)
+
+
+def flow_agg_reference(rows, pflow, *, n_flows: int):
+    """Oracle for kernels.flow_agg (mirrors engine.py flow_sums_fn's
+    one-hot GEMM): ``out[k, f] = sum(rows[k, pflow == f])``."""
+    oh = (pflow[:, None]
+          == jnp.arange(n_flows, dtype=jnp.int32)[None, :]
+          ).astype(jnp.float32)
+    return (rows.astype(jnp.float32) @ oh).astype(jnp.int32)
+
+
 def rwkv6_reference(r, k, v, w, u, wkv0):
     """Sequential RWKV-6 recurrence (fp32).
 

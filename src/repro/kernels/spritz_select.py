@@ -47,7 +47,20 @@ def spritz_select(w, u, buf_front, packet_count, *, explore_threshold: int,
     w: [F, P] effective weights; u: [F] uniforms; buf_front: [F] (-1 empty);
     packet_count: [F].  Returns (ev [F], new_count [F], used_buffer [F]).
     """
+    if w.ndim != 2:
+        raise ValueError(f"w must be 2-D [F, P], got shape {w.shape}")
+    if not (u.ndim == buf_front.ndim == packet_count.ndim == 1):
+        raise ValueError("u/buf_front/packet_count must be 1-D")
     F, P = w.shape
+    if not (u.shape[0] == buf_front.shape[0] == packet_count.shape[0] == F):
+        raise ValueError(
+            f"ragged inputs: w rows {F}, u {u.shape[0]}, "
+            f"buf_front {buf_front.shape[0]}, "
+            f"packet_count {packet_count.shape[0]}")
+    if buf_front.dtype != jnp.int32 or packet_count.dtype != jnp.int32:
+        raise ValueError(
+            f"buf_front/packet_count must be int32, got "
+            f"{buf_front.dtype}/{packet_count.dtype}")
     block_f = min(block_f, F)
     padF = (F + block_f - 1) // block_f * block_f
     if padF != F:

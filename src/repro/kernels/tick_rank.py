@@ -1,0 +1,84 @@
+"""Per-tick FIFO enqueue rank as a Pallas TPU kernel.
+
+The packet engine's enqueue phase needs, for every packet enqueued this
+tick, its arrival rank among same-tick arrivals at the same egress port
+(engine.py ``_enqueue_rank``): the analytic FIFO then departs the rank-k
+accept at ``max(tail, t) + k + 1``.  At paper scale the engine's one-hot
+rank histogram ([M, n_ports] cells) blows the one-hot budget and the
+argsort fallback serializes; this kernel streams the compacted enqueue
+set in blocks and carries a per-port running count across blocks in VMEM
+scratch — the segmented scatter-rank with O(M * n_ports / block) work and
+no [M, n_ports] materialization.
+
+Grid is 1-D over packet blocks and *must* execute sequentially (TPU grids
+do; the interpreter does): block i reads the counts accumulated by blocks
+< i, ranks its packets with an in-block one-hot cumsum, then bumps the
+counts.  f32 count arithmetic is exact (counts < 2^24).
+
+Entries outside ``[0, n_ports)`` (the compaction sentinel ``n_ports``,
+or -1 pads) share one overflow bucket; their ranks are well-defined but
+engine callers never consume them (they are masked by ``valid``).
+Oracle: ``ref.tick_rank_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tick_rank_kernel(port_ref, rank_ref, counts_ref, *, n_ports):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    port = port_ref[...]                                       # [bm] i32
+    # out-of-range entries (sentinel n_ports, -1 pads) -> overflow bucket
+    port_c = jnp.where((port < 0) | (port >= n_ports), n_ports, port)
+    oh = (port_c[:, None]
+          == jnp.arange(n_ports + 1, dtype=jnp.int32)[None, :]
+          ).astype(jnp.float32)                                # [bm, np+1]
+    counts = counts_ref[...]                                   # [np+1] f32
+    prev = oh @ counts                                         # [bm]
+    within = jnp.cumsum(oh, axis=0) * oh
+    wrank = jnp.sum(within, axis=1) - 1.0                      # [bm] 0-based
+    rank_ref[...] = (prev + wrank).astype(jnp.int32)
+    counts_ref[...] = counts + jnp.sum(oh, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_ports", "block_m",
+                                             "interpret"))
+def tick_rank(port, *, n_ports: int, block_m: int = 512,
+              interpret: bool = True):
+    """port: [M] i32 egress port per compacted enqueue.  Returns rank [M]
+    i32 — position among this tick's enqueues of the same port, ordered
+    by index."""
+    if port.ndim != 1:
+        raise ValueError(f"port must be 1-D, got shape {port.shape}")
+    if port.dtype != jnp.int32:
+        raise ValueError(f"port must be int32, got {port.dtype}")
+    if n_ports < 1:
+        raise ValueError(f"n_ports must be >= 1, got {n_ports}")
+    M = port.shape[0]
+    block_m = min(block_m, M)
+    padM = (M + block_m - 1) // block_m * block_m
+    if padM != M:
+        # pads land in the overflow bucket *after* every real entry, so
+        # real ranks are unchanged
+        port = jnp.pad(port, (0, padM - M), constant_values=-1)
+    grid = (padM // block_m,)
+    rank = pl.pallas_call(
+        functools.partial(_tick_rank_kernel, n_ports=n_ports),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padM,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((n_ports + 1,), jnp.float32)],
+        interpret=interpret,
+    )(port)
+    return rank[:M]

@@ -61,6 +61,10 @@ class SpritzConfig(NamedTuple):
     w_down: float = 0.5
     w_up: float = 1.25
     w_floor: float = 0.05
+    use_kernels: bool = False       # route Algorithm 1's selection core
+    #   through kernels.spritz_select (DESIGN.md §14); bit-identical to
+    #   the jnp path — both consume ONE uniform(rng, (F, 1)) draw and run
+    #   the same cumsum/compare math per row
 
 
 class SpritzState(NamedTuple):
@@ -110,9 +114,9 @@ def send_logic(state: SpritzState, cfg: SpritzConfig, rng: jax.Array,
     ECN-rate estimate behind the minimal-bias rule).
     """
     w_eff = effective_weights(state, t)
-    sampled = _weighted_sample(rng, w_eff)
 
     if cfg.always_sample:  # OPS(u)/OPS(w): stateless spraying
+        sampled = _weighted_sample(rng, w_eff)
         return state, sampled, jnp.ones_like(sampled, dtype=bool)
 
     explore = state.packet_count >= cfg.explore_threshold
@@ -127,9 +131,21 @@ def send_logic(state: SpritzState, cfg: SpritzConfig, rng: jax.Array,
         jnp.take_along_axis(state.blocked_until,
                             jnp.maximum(buf_front, 0)[:, None],
                             axis=1)[:, 0] > t)
-    use_buffer = (~explore) & buf_nonempty & ~front_blocked
 
-    ev = jnp.where(use_buffer, buf_front, sampled)
+    if cfg.use_kernels:
+        # the kernel fuses sampling + explore-counter + front selection;
+        # a blocked front is passed as -1 (empty), which reproduces the
+        # use_buffer = ~explore & nonempty & ~blocked rule exactly
+        from repro.kernels import ops as KOPS
+        front_eff = jnp.where(front_blocked, -1, buf_front)
+        u = jax.random.uniform(rng, (w_eff.shape[0], 1))[:, 0]
+        ev, _, use_buffer = KOPS.spritz_select(
+            w_eff, u, front_eff, state.packet_count,
+            explore_threshold=cfg.explore_threshold)
+    else:
+        sampled = _weighted_sample(rng, w_eff)
+        use_buffer = (~explore) & buf_nonempty & ~front_blocked
+        ev = jnp.where(use_buffer, buf_front, sampled)
 
     # Spray consumes the front slot whenever the walk consults the buffer —
     # either using a live front or discarding a blocked one.  Explore ticks
@@ -291,6 +307,7 @@ def _make_cfg(variant):
             min_bias_factor=spec.min_bias_factor,
             block_ticks=spec.block_ticks,
             always_sample=False,
+            use_kernels=bool(getattr(spec, "use_kernels", False)),
         )
     return make_cfg
 

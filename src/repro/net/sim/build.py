@@ -47,6 +47,7 @@ def build_spec(
     explore_threshold: int | None = None,
     ecn_threshold: int | None = None,
     block_ticks: int | None = None,
+    use_kernels: bool = False,
 ) -> SimSpec:
     # scheme may be a registry name or an integer code (deprecation shim);
     # per-scheme weight/static-path rules come from the policy registry
@@ -192,6 +193,7 @@ def build_spec(
                            else max(4, bdp // 2)),
         ecn_threshold=(ecn_threshold if ecn_threshold is not None
                        else max(2, bdp // 10)),
+        use_kernels=use_kernels,
         **({} if block_ticks is None else dict(block_ticks=block_ticks)),
     )
 

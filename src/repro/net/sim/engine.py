@@ -42,12 +42,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as KOPS
 from repro.net.policies import base as PB
 from repro.net.policies import registry as REG
 from repro.net.sim.types import (FB_ACK_ECN, FB_ACK_OK, FB_NACK, FB_NONE,
                                  FB_TIMEOUT, P_ACKWAIT, P_FREE, P_LOST,
                                  P_NACKWAIT, P_PROP, P_QUEUED, SimResult,
-                                 SimSpec)
+                                 SimSpec, enqueue_bound)
 
 INF_TICK = jnp.int32(1 << 30)
 _NEVER_SVC = -(1 << 30)   # last_svc sentinel: first service always legal
@@ -187,10 +188,10 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
     HAS_RATE = bool((fev_ivl_np > 1).any())
 
     n_eps = int(spec.src_ep.max()) + 1 if len(spec.src_ep) else 1
-    # Per-tick enqueue bound: each port services <= 1 pkt/tick and per-port
-    # propagation latency is constant, so forwarded arrivals are <= n_ports;
-    # endpoint arbitration admits <= 1 injection per source endpoint.
-    M = int(min(N, NP_ + n_eps + 8))
+    # Per-tick enqueue bound (types.enqueue_bound): all FIFO/RED/trim math
+    # runs over [M] compacted arrays, never [N] or [M, n_ports].
+    M = enqueue_bound(N, NP_, n_eps)
+    use_kernels = bool(getattr(spec, "use_kernels", False))
     use_onehot_rank = M * NP_ <= _ONEHOT_CELLS
     use_gemm_sums = N * F <= _ONEHOT_CELLS
 
@@ -277,8 +278,14 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         (XLA CPU scatter walks updates serially; the [K,N]x[N,F] product
         vectorizes).  Counts are < 2^24, so f32 accumulation is exact.
         Beyond the one-hot cell budget (paper-scale F x N) fall back to
-        segment scatter-adds — exact either way."""
-        if use_gemm_sums:
+        one multi-column segment scatter-add; with ``use_kernels`` the
+        Pallas flow_agg kernel streams the same GEMM in [K, block] tiles
+        without materializing [N, F] — exact either way."""
+        if use_kernels:
+            def flow_sums(rows):                             # [K, N] -> [K, F]
+                return KOPS.flow_agg(rows.astype(jnp.int32), pflow,
+                                     n_flows=F)
+        elif use_gemm_sums:
             flow_oh = (pflow[:, None]
                        == jnp.arange(F, dtype=jnp.int32)[None, :]
                        ).astype(jnp.float32)                 # [N, F]
@@ -288,9 +295,10 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
                         @ flow_oh).astype(jnp.int32)
         else:
             def flow_sums(rows):
-                return jnp.stack([
-                    jnp.zeros(F, jnp.int32).at[pflow].add(
-                        r.astype(jnp.int32)) for r in rows])
+                # one scatter pass over all K columns (integer adds are
+                # order-independent: bit-identical to the GEMM path)
+                return jnp.zeros((F, rows.shape[0]), jnp.int32).at[
+                    pflow].add(rows.T.astype(jnp.int32)).T
         return flow_sums
 
     def collect_feedback(c: Carry, pstate0, pevent0, t, flow_sums):
@@ -569,27 +577,35 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
             # divided by the port's service interval.  Trim/RED compare
             # against packet thresholds (qsize/kmin/kmax), so a degraded
             # port holds the same number of packets but drains slower.
+            # (kernel dispatch bypasses to jnp under HAS_RATE: red_ecn
+            # models the full-rate slot math only — DESIGN.md §14)
             ivl_e = port_ivl[jnp.minimum(cport, NP_ - 1)]
             occ_at = _ceildiv(jnp.maximum(tail_e - t, 0), ivl_e) + rank
+        elif use_kernels:
+            ivl_e = None
+            occ_at, trim, mark, slot = KOPS.red_ecn(
+                cport, rank, valid, jax.random.uniform(k_mark, (M,)),
+                q_tail0, t, qsize=spec.qsize, kmin=spec.kmin,
+                kmax=spec.kmax, n_ports=NP_)
         else:
             ivl_e = None
             occ_at = jnp.maximum(tail_e - t, 0) + rank
-        trim = valid & (occ_at >= spec.qsize)
-        accept = valid & ~(occ_at >= spec.qsize)
-
-        # RED / ECN marking probability between kmin..kmax
-        pr = jnp.clip((occ_at.astype(jnp.float32) - spec.kmin)
-                      / max(spec.kmax - spec.kmin, 1e-9), 0.0, 1.0)
-        mark = accept & (jax.random.uniform(k_mark, (M,)) < pr)
+        if HAS_RATE or not use_kernels:
+            trim = valid & (occ_at >= spec.qsize)
+            # RED / ECN marking probability between kmin..kmax
+            pr = jnp.clip((occ_at.astype(jnp.float32) - spec.kmin)
+                          / max(spec.kmax - spec.kmin, 1e-9), 0.0, 1.0)
+            mark = (valid & ~trim) & (jax.random.uniform(k_mark, (M,)) < pr)
+            if HAS_RATE:
+                # service slots stride by the interval: rank-k accept
+                # departs at max(tail, t) + (k+1)*ivl — rate 1/ivl by
+                # construction
+                slot = jnp.maximum(tail_e, t) + (rank + 1) * ivl_e
+            else:
+                slot = jnp.maximum(tail_e, t) + rank + 1
+        accept = valid & ~trim
         pecn = pecn | jnp.zeros(N + 1, bool).at[
             jnp.where(mark, cidx_s, N)].set(True)[:N]
-
-        if HAS_RATE:
-            # service slots stride by the interval: rank-k accept departs
-            # at max(tail, t) + (k+1)*ivl — rate 1/ivl by construction
-            slot = jnp.maximum(tail_e, t) + (rank + 1) * ivl_e
-        else:
-            slot = jnp.maximum(tail_e, t) + rank + 1
         # trimmed: header continues + NACK returns (priority, prop-only)
         nack_at = t + rem_ticks[jnp.minimum(cflow, F - 1), cpath,
                                 jnp.minimum(chop, rem_ticks.shape[2] - 1)]
@@ -636,9 +652,14 @@ def build_tick(spec: SimSpec, *, batched: bool = False):
         one-hot port indicators (cumsum of scatter contributions) read back
         at each packet's own port.  Large fabrics: stable argsort over the
         M-compacted set (still ~N/M cheaper than the old table-wide sort).
-        Both produce the identical rank: position among this tick's
-        enqueues of the same port, ordered by packet-table index.
+        With ``use_kernels`` the Pallas tick_rank kernel streams the same
+        segmented rank in blocks with a per-port VMEM count carry.  All
+        paths produce the identical rank for valid entries: position among
+        this tick's enqueues of the same port, ordered by packet-table
+        index (invalid/sentinel entries are masked by callers).
         """
+        if use_kernels:
+            return KOPS.tick_rank(cport, n_ports=NP_)
         if use_onehot_rank:
             oh = cport[:, None] == jnp.arange(NP_, dtype=jnp.int32)[None, :]
             pos = jnp.cumsum(oh.astype(jnp.int32), axis=0) * oh
@@ -816,16 +837,32 @@ def _spec_key(spec: SimSpec) -> tuple:
     return (tuple(scalars), h.hexdigest())
 
 
-def _runner(spec: SimSpec, *, dense: bool, batched: bool):
-    key = (_spec_key(spec), dense, batched)
+def _runner(spec: SimSpec, *, dense: bool, batched: bool, shard: int = 0):
+    # _ONEHOT_CELLS keys the cache too: tests monkeypatch the threshold to
+    # force the fallback paths, which changes the traced program without
+    # changing the spec fingerprint
+    key = (_spec_key(spec), dense, batched, shard, _ONEHOT_CELLS)
     runner = _RUNNER_CACHE.get(key)
     if runner is None:
         loop = _make_loop(spec, dense=dense, batched=batched)
         if batched:
-            runner = jax.jit(
-                jax.vmap(lambda c, w, ln: loop(c, w, ln),
-                         in_axes=(0, None, 0)),
-                donate_argnums=(0,))
+            vloop = jax.vmap(lambda c, w, ln: loop(c, w, ln),
+                             in_axes=(0, None, 0))
+            if shard > 1:
+                # split the lane axis across devices (DESIGN.md §5): each
+                # device runs the identical vmapped driver over its lane
+                # slice, so per-lane results are bit-identical to the
+                # unsharded (and solo) runs — lanes never communicate.
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import Mesh
+                from jax.sharding import PartitionSpec as PS
+                mesh = Mesh(np.asarray(jax.devices()[:shard]), ("lanes",))
+                vloop = shard_map(
+                    vloop, mesh=mesh,
+                    in_specs=(PS("lanes"), PS(), PS("lanes")),
+                    out_specs=(PS("lanes"), PS("lanes"), PS("lanes")),
+                    check_rep=False)
+            runner = jax.jit(vloop, donate_argnums=(0,))
         else:
             runner = jax.jit(lambda c, w: loop(c, w), donate_argnums=(0,))
         if len(_RUNNER_CACHE) >= _RUNNER_CACHE_MAX:
@@ -856,6 +893,15 @@ def _result(carry: Carry, t, steps) -> SimResult:
         down_violations=int(carry.viol),
         rate_violations=int(carry.rviol),
     )
+
+
+def live_carry_bytes(carry: Carry) -> int:
+    """Bytes of live donated carry state (pytree leaf sum) — the number
+    ``bench_engine`` reports as the engine's resident footprint.  The
+    carry is occupancy-bounded (packet table + per-flow/per-port vectors,
+    DESIGN.md §14): no leaf scales with n_ports x n_flows."""
+    return int(sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(carry)))
 
 
 def _carry_state(carry: Carry) -> dict:
@@ -928,7 +974,8 @@ def run_batch(spec: SimSpec | Sequence[SimSpec],
               seeds: Sequence[int] = (0,),
               stop_flows: np.ndarray | None = None,
               reference: bool = False,
-              return_carry: bool = False):
+              return_carry: bool = False,
+              shard: bool | None = None):
     """Batched driver: one compiled program for a scheme x seed sweep.
 
     Either pass one base ``spec`` plus ``schemes`` (registry names or
@@ -939,6 +986,13 @@ def run_batch(spec: SimSpec | Sequence[SimSpec],
     order — and results come back as a flat list of ``SimResult`` of
     length ``len(schemes) * len(seeds)``.  ``return_carry=True`` returns
     ``(results, states)`` with one nested-NumPy carry dict per lane.
+
+    ``shard`` splits the lane axis across the process's devices with
+    ``shard_map`` (DESIGN.md §5): ``None`` auto-enables when more than
+    one device is visible, ``False`` forces the single-device vmap.  The
+    lane count is padded to a device multiple by replicating lane 0 (pad
+    results are dropped); per-lane results are bit-identical either way
+    because lanes never communicate.
     """
     if isinstance(spec, SimSpec):
         if schemes is None:
@@ -965,27 +1019,33 @@ def run_batch(spec: SimSpec | Sequence[SimSpec],
         lane_specs = [(s.scheme, np.asarray(s.weights, np.float32),
                        np.asarray(s.static_path, np.int32)) for s in specs]
 
+    lanes_flat = [(s, w, p, seed)
+                  for (s, w, p) in lane_specs for seed in seeds]
+    n_lanes = len(lanes_flat)
+    ndev = jax.device_count()
+    if shard is None:
+        shard = ndev > 1 and n_lanes > 1
+    n_shard = ndev if shard else 0
+    if n_shard > 1 and n_lanes % n_shard:
+        lanes_flat = lanes_flat + lanes_flat[:1] * (-n_lanes % n_shard)
     lanes = Lane(
-        scheme=jnp.asarray(np.repeat([s for s, _, _ in lane_specs],
-                                     len(seeds)), jnp.int32),
-        weights=jnp.asarray(np.repeat(
-            np.stack([w for _, w, _ in lane_specs]), len(seeds), axis=0)),
-        static_path=jnp.asarray(np.repeat(
-            np.stack([p for _, _, p in lane_specs]), len(seeds), axis=0)),
+        scheme=jnp.asarray([s for s, _, _, _ in lanes_flat], jnp.int32),
+        weights=jnp.asarray(np.stack([w for _, w, _, _ in lanes_flat])),
+        static_path=jnp.asarray(np.stack([p for _, _, p, _ in lanes_flat])),
     )
     carries = [init_carry(base, seed, weights=w, static_path=p)
-               for (_, w, p) in lane_specs for seed in seeds]
+               for (_, w, p, seed) in lanes_flat]
     carry0 = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
     watch = jnp.asarray(_watch_mask(base, stop_flows))
 
-    runner = _runner(base, dense=reference, batched=True)
+    runner = _runner(base, dense=reference, batched=True, shard=n_shard)
     with warnings.catch_warnings():
         # donation is a no-op on CPU; the advisory warning is noise there
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
         carry, t, steps = runner(carry0, watch, lanes)
     out, states = [], []
-    for i in range(len(lane_specs) * len(seeds)):
+    for i in range(n_lanes):  # pad lanes (lane-0 replicas) are dropped
         lane_carry = jax.tree.map(lambda x: x[i], carry)
         out.append(_result(lane_carry, t[i], steps[i]))
         if return_carry:

@@ -38,6 +38,16 @@ P_FREE, P_QUEUED, P_PROP, P_ACKWAIT, P_NACKWAIT, P_LOST = 0, 1, 2, 3, 4, 5
 FB_ACK_OK, FB_ACK_ECN, FB_NACK, FB_TIMEOUT, FB_NONE = 0, 1, 2, 3, 4
 
 
+def enqueue_bound(n_pkt: int, n_ports: int, n_eps: int) -> int:
+    """Per-tick enqueue bound M (DESIGN.md §14): each port services <= 1
+    packet/tick with constant per-port propagation latency, so forwarded
+    arrivals are <= n_ports; endpoint arbitration admits <= 1 injection
+    per source endpoint.  The engine's compacted enqueue arrays are [M],
+    never [n_pkt] — per-tick FIFO/RED/trim work scales with the active
+    set, not the table."""
+    return int(min(n_pkt, n_ports + n_eps + 8))
+
+
 def _empty_i32() -> np.ndarray:
     return np.zeros(0, np.int32)
 
@@ -207,6 +217,13 @@ class SimSpec:
     dctcp_g: float = 1.0 / 16.0
     quick_adapt: bool = True
     fast_increase: bool = True
+
+    # engine kernel dispatch (DESIGN.md §14): route the tick's dense
+    # phases (rank/RED-ECN/flow-agg/spritz-select) through the Pallas
+    # kernels in repro.kernels — interpret-mode on CPU, real lowering on
+    # TPU.  Bit-identical to the pure-jnp phases by construction (integer
+    # math, shared uniform draws); enforced by tests/test_engine_kernels.
+    use_kernels: bool = False
 
     @property
     def n_flows(self) -> int:

@@ -131,6 +131,116 @@ def test_red_ecn_shapes(N, P, block, t):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(wnt))
 
 
+@pytest.mark.parametrize("N,P,block", [(700, 33, 512), (5024, 3960, 512),
+                                       (17, 4, 512)])
+def test_red_ecn_ragged_lengths_pad_internally(N, P, block):
+    """N need not be a block multiple (the engine's compacted enqueue
+    set M = n_ports + n_eps + 8 rarely is): the wrapper pads with
+    enq=False rows and slices them back off."""
+    eport = jnp.asarray(RNG.integers(0, P + 1, N), jnp.int32)
+    rank = jnp.asarray(RNG.integers(0, 8, N), jnp.int32)
+    enq = jnp.asarray(RNG.uniform(size=N) < 0.5)
+    unif = jnp.asarray(RNG.uniform(size=N), jnp.float32)
+    tails = jnp.asarray(RNG.integers(0, 200, P), jnp.int32)
+    kw = dict(qsize=88, kmin=17.6, kmax=70.4, n_ports=P)
+    got = ops.red_ecn(eport, rank, enq, unif, tails, 40, block_n=block,
+                      interpret=True, **kw)
+    want = ref.red_ecn_reference(eport, rank, enq, unif, tails, 40, **kw)
+    for g, wnt in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wnt))
+
+
+@pytest.mark.parametrize("M,P,block", [(64, 8, 16), (1000, 128, 256),
+                                       (5024, 3960, 512), (37, 3960, 512)])
+def test_tick_rank_matches_reference(M, P, block):
+    port = jnp.asarray(RNG.integers(-1, P + 1, M), jnp.int32)
+    got = ops.tick_rank(port, n_ports=P, block_m=block, interpret=True)
+    want = ref.tick_rank_reference(port, n_ports=P)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tick_rank_is_stable_fifo_rank():
+    # rank must be the position among equal ports ordered by index —
+    # the analytic FIFO's same-tick arrival order
+    port = jnp.asarray([3, 1, 3, 3, 0, 1], jnp.int32)
+    got = np.asarray(ops.tick_rank(port, n_ports=4, interpret=True))
+    np.testing.assert_array_equal(got, [0, 0, 1, 2, 0, 1])
+
+
+@pytest.mark.parametrize("K,N,F,block", [(6, 512, 16, 128),
+                                         (2, 700, 300, 256),
+                                         (6, 5000, 1056, 1024)])
+def test_flow_agg_matches_reference(K, N, F, block):
+    rows = jnp.asarray(RNG.integers(0, 1 << 16, (K, N)), jnp.int32)
+    pflow = jnp.asarray(RNG.integers(0, F + 1, N), jnp.int32)  # incl. trash
+    got = ops.flow_agg(rows, pflow, n_flows=F, block_n=block, interpret=True)
+    want = ref.flow_agg_reference(rows, pflow, n_flows=F)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_flow_agg_bool_rows():
+    rows = jnp.asarray(RNG.uniform(size=(4, 300)) < 0.5)
+    pflow = jnp.asarray(RNG.integers(0, 7, 300), jnp.int32)
+    got = ops.flow_agg(rows, pflow, n_flows=7, block_n=64, interpret=True)
+    want = ref.flow_agg_reference(rows.astype(jnp.int32), pflow, n_flows=7)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------- input validation (ragged) --
+def test_spritz_select_rejects_ragged_inputs():
+    w = jnp.zeros((16, 8), jnp.float32)
+    u = jnp.zeros(16, jnp.float32)
+    front = jnp.zeros(16, jnp.int32)
+    cnt = jnp.zeros(16, jnp.int32)
+    with pytest.raises(ValueError, match="ragged"):
+        ops.spritz_select(w, u[:8], front, cnt, explore_threshold=4,
+                          interpret=True)
+    with pytest.raises(ValueError, match="2-D"):
+        ops.spritz_select(u, u, front, cnt, explore_threshold=4,
+                          interpret=True)
+    with pytest.raises(ValueError, match="int32"):
+        ops.spritz_select(w, u, front.astype(jnp.float32), cnt,
+                          explore_threshold=4, interpret=True)
+
+
+def test_red_ecn_rejects_ragged_inputs():
+    N, P = 64, 8
+    eport = jnp.zeros(N, jnp.int32)
+    rank = jnp.zeros(N, jnp.int32)
+    enq = jnp.zeros(N, bool)
+    unif = jnp.zeros(N, jnp.float32)
+    tails = jnp.zeros(P, jnp.int32)
+    kw = dict(qsize=8, kmin=1.0, kmax=4.0, n_ports=P, interpret=True)
+    with pytest.raises(ValueError, match="ragged"):
+        ops.red_ecn(eport, rank[:32], enq, unif, tails, 0, **kw)
+    with pytest.raises(ValueError, match="int32"):
+        ops.red_ecn(eport.astype(jnp.int16), rank, enq, unif, tails, 0, **kw)
+    with pytest.raises(ValueError, match="q_tail"):
+        ops.red_ecn(eport, rank, enq, unif, tails[:4], 0, **kw)
+
+
+def test_tick_rank_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="1-D"):
+        ops.tick_rank(jnp.zeros((4, 4), jnp.int32), n_ports=4,
+                      interpret=True)
+    with pytest.raises(ValueError, match="int32"):
+        ops.tick_rank(jnp.zeros(4, jnp.float32), n_ports=4, interpret=True)
+    with pytest.raises(ValueError, match="n_ports"):
+        ops.tick_rank(jnp.zeros(4, jnp.int32), n_ports=0, interpret=True)
+
+
+def test_flow_agg_rejects_bad_inputs():
+    rows = jnp.zeros((3, 64), jnp.int32)
+    pflow = jnp.zeros(64, jnp.int32)
+    with pytest.raises(ValueError, match="mismatch"):
+        ops.flow_agg(rows, pflow[:32], n_flows=4, interpret=True)
+    with pytest.raises(ValueError, match="2-D"):
+        ops.flow_agg(pflow, pflow, n_flows=4, interpret=True)
+    with pytest.raises(ValueError, match="int32"):
+        ops.flow_agg(rows, pflow.astype(jnp.float32), n_flows=4,
+                     interpret=True)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_rwkv6_chunked_dtypes(dtype):
     B, S, H, hd = 1, 64, 2, 64

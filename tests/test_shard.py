@@ -1,0 +1,81 @@
+"""shard_map'd scheme x seed sweeps (DESIGN.md §5/§14).
+
+``run_batch(shard=True)`` splits the flattened lane axis across devices
+with ``shard_map`` instead of running the whole vmap on one device.  The
+contract is bit-identity: sharded == vmapped == solo, per lane, on every
+result field including ``steps_executed``.
+
+These tests need >= 2 devices.  CI provides them on CPU via
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4
+
+which must be set before jax initializes — hence a separate pytest
+invocation (see ci.yml "sharded smoke"); under the default single-device
+run the whole module skips.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.net.sim import build as B
+from repro.net.sim import engine as E
+from repro.net.sim.types import ECMP, SCHEME_NAMES, SPRAY_W, UGAL_L
+from repro.net.topology.dragonfly import make_dragonfly
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="shard_map tests need >= 2 devices "
+           "(set XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+DF = make_dragonfly(4, 2, 2)
+FLOWS = [B.Flow(e, 40 + (e % 3), 40 + 8 * (e % 2), start_tick=16 * e)
+         for e in range(6)]
+
+RESULT_FIELDS = ("fct_ticks", "delivered", "trims", "timeouts", "ooo",
+                 "retx", "done")
+
+
+def _spec():
+    return B.build_spec(DF, FLOWS, SPRAY_W, n_ticks=1 << 12)
+
+
+def _assert_same(a, b, ctx):
+    for name in RESULT_FIELDS:
+        assert np.array_equal(getattr(a, name), getattr(b, name)), (ctx,
+                                                                    name)
+    assert a.steps_executed == b.steps_executed, ctx
+    assert a.ticks_simulated == b.ticks_simulated, ctx
+
+
+def test_shard_matches_vmap_bit_identical():
+    # 3 schemes x 2 seeds = 6 lanes on 4 devices: exercises lane padding
+    # (6 -> 8) and the padded-lane drop on the way out
+    spec = _spec()
+    schemes = [ECMP, UGAL_L, SPRAY_W]
+    seeds = [0, 1]
+    got = E.run_batch(spec, schemes=schemes, seeds=seeds, shard=True)
+    want = E.run_batch(spec, schemes=schemes, seeds=seeds, shard=False)
+    assert len(got) == len(want) == len(schemes) * len(seeds)
+    for (scheme, seed), g, w in zip(E.batch_lanes(schemes, seeds),
+                                    got, want):
+        _assert_same(g, w, (SCHEME_NAMES[scheme], seed))
+
+
+def test_shard_lane_matches_solo():
+    spec = _spec()
+    res = E.run_batch(spec, schemes=[ECMP, SPRAY_W], seeds=[0, 3],
+                      shard=True)
+    _assert_same(res[3], E.run(B.respec_scheme(spec, SPRAY_W), seed=3),
+                 "lane vs solo")
+
+
+def test_shard_auto_enables_on_multidevice():
+    # shard=None should pick sharding on its own when lanes and devices
+    # both exceed one, and still be bit-identical to the explicit path
+    spec = _spec()
+    auto = E.run_batch(spec, schemes=[ECMP, SPRAY_W], seeds=[0])
+    off = E.run_batch(spec, schemes=[ECMP, SPRAY_W], seeds=[0],
+                      shard=False)
+    for g, w in zip(auto, off):
+        _assert_same(g, w, "auto-shard")

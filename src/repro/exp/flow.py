@@ -137,10 +137,17 @@ def run_flow_cell(cell, schemes, seeds, verbose=True) -> list[dict]:
             rows.append(row)
             if verbose:
                 print("   ", row, flush=True)
-    for row in rows:
-        ecmp = per_seed_ecmp.get(row["seed"], -1.0)
-        if ecmp > 0 and row["fct_us"] > 0:
-            row["fct_ratio_vs_ecmp"] = round(row["fct_us"] / ecmp, 3)
+    # ratio column only exists when the ecmp reference was part of the
+    # run (guards legitimately skip it otherwise); within such a run a
+    # non-computable ratio is the explicit -1.0 sentinel — a collapsed
+    # lane must FAIL a baseline guard, never silently drop out of it
+    if "ecmp" in schemes:
+        for row in rows:
+            ecmp = per_seed_ecmp.get(row["seed"], -1.0)
+            if ecmp > 0 and row["fct_us"] > 0:
+                row["fct_ratio_vs_ecmp"] = round(row["fct_us"] / ecmp, 3)
+            else:
+                row["fct_ratio_vs_ecmp"] = -1.0
     if cell.failure:
         for row in rows:
             row["scenario"] = cell.failure

@@ -20,10 +20,25 @@ Guards turn a cell's metric rows into pass/fail verdicts expressed
   compared on ``metric`` within relative ``tol`` (or absolute
   ``abs_tol``); schemes absent from the baseline are skipped, so a
   narrowed ``--schemes`` run guards only what it ran.
+
+Every kind accepts an optional ``where`` mapping — an equality row
+filter applied before evaluation (``{"where": {"load": 0.9}}`` scopes
+a guard to one point of an offered-load sweep, DESIGN.md §15).
+
+**Sentinel discipline.**  Executors emit the explicit ``-1.0`` sentinel
+(:data:`repro.net.steady.EMPTY`) — never NaN — when a statistic has no
+data (e.g. the completed-flow filter matched nothing).  Guards treat a
+metric that is *present but sentinel/NaN on every row of a scheme that
+ran* as a hard failure, not a skip: an empty FCT sample under a ratio
+guard means the scheme collapsed, and silently passing would hide
+exactly the regressions the guard exists to catch (regression-pinned
+by ``tests/test_exp.py``).  Skips remain only for schemes genuinely
+absent from a narrowed ``--schemes`` run.
 """
 from __future__ import annotations
 
 import json
+import math
 import operator
 from pathlib import Path
 
@@ -33,10 +48,37 @@ _OPS = {"==": operator.eq, "<=": operator.le, ">=": operator.ge,
         "<": operator.lt, ">": operator.gt}
 
 
+def _rows_where(rows, g):
+    """Apply the guard's optional ``where`` equality filter."""
+    where = g.get("where")
+    if not where:
+        return rows
+    return [r for r in rows
+            if all(r.get(k) == v for k, v in where.items())]
+
+
+def _metric_vals(rows, scheme, metric):
+    """Split a scheme's metric column into (valid values, n_invalid).
+
+    Valid = finite and non-negative; NaN and the ``-1.0`` empty-stats
+    sentinel count as *invalid but present* — the distinction between
+    "scheme not run" (skip) and "scheme ran and produced no data"
+    (fail)."""
+    vals, invalid = [], 0
+    for r in rows:
+        if r.get("scheme") != scheme or metric not in r:
+            continue
+        v = r[metric]
+        if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                and math.isfinite(v) and v >= 0:
+            vals.append(v)
+        else:
+            invalid += 1
+    return vals, invalid
+
+
 def _mean_metric(rows, scheme, metric):
-    vals = [r[metric] for r in rows
-            if r.get("scheme") == scheme and metric in r
-            and isinstance(r[metric], (int, float)) and r[metric] >= 0]
+    vals, _ = _metric_vals(rows, scheme, metric)
     return sum(vals) / len(vals) if vals else None
 
 
@@ -59,6 +101,7 @@ def _eval_counter(g, rows):
     if g.get("scheme") and not _ran(rows, g["scheme"]):
         return dict(ok=True, value=None,
                     note=f"skipped: {g['scheme']} not in this run")
+    rows = _rows_where(rows, g)
     sel = [r for r in rows
            if metric in r and (g.get("scheme") is None
                                or r.get("scheme") == g["scheme"])]
@@ -85,13 +128,22 @@ def _eval_ratio(g, rows):
     if skipped:
         return dict(ok=True, value=None,
                     note=f"skipped: {','.join(skipped)} not in this run")
-    num = _mean_metric(rows, g["num"], g["metric"])
-    den = _mean_metric(rows, g["den"], g["metric"])
-    if num is None or den is None or den == 0:
+    rows = _rows_where(rows, g)
+    parts = {}
+    for side in ("num", "den"):
+        vals, invalid = _metric_vals(rows, g[side], g["metric"])
+        if not vals:
+            # the scheme RAN — a missing or all-sentinel column is a
+            # failure, never a silent pass
+            why = (f"{invalid} sentinel/NaN values" if invalid
+                   else "metric missing")
+            return dict(ok=False, value=None,
+                        note=f"{g[side]}: {why} for {g['metric']!r}")
+        parts[side] = sum(vals) / len(vals)
+    if parts["den"] == 0:
         return dict(ok=False, value=None,
-                    note=f"missing {g['metric']} for "
-                         f"{g['num'] if num is None else g['den']}")
-    ratio = num / den
+                    note=f"zero denominator {g['den']}:{g['metric']}")
+    ratio = parts["num"] / parts["den"]
     return dict(ok=bool(_OPS[g.get("op", "<=")](ratio, g["value"])),
                 value=round(ratio, 4))
 
@@ -109,6 +161,7 @@ def _eval_baseline(g, rows):
     base, err = _load_baseline(g["file"], g["path"])
     if err:
         return dict(ok=False, value=None, note=err)
+    rows = _rows_where(rows, g)
     val = _mean_metric(rows, g.get("scheme"), g["metric"]) \
         if g.get("scheme") else _mean_metric(
             rows, rows[0].get("scheme") if rows else None, g["metric"])
@@ -129,26 +182,42 @@ def _eval_baseline_schemes(g, rows):
     if err:
         return dict(ok=False, value=None, note=err)
     metric, tol, abs_tol = g["metric"], g.get("tol"), g.get("abs_tol")
+    sel = _rows_where(rows, g)
+    # a run in which NO row carries the metric cannot evaluate it at
+    # all (e.g. a --schemes run without ecmp emits no ratio column):
+    # that is a legitimate skip, distinct from a scheme that collapsed
+    if not any(metric in r for r in sel):
+        return dict(ok=True, value=0,
+                    note=f"skipped: no row carries {metric!r} to "
+                         f"compare against {g['path']}")
     bad, checked = [], 0
     for scheme, bcell in base.items():
         if metric not in bcell:
             continue
-        val = _mean_metric(rows, scheme, metric)
-        if val is None:
+        if not _ran(rows, scheme):
             continue                      # scheme not run this invocation
+        vals, invalid = _metric_vals(sel, scheme, metric)
+        if not vals:
+            # ran but produced no comparable value: a collapsed run
+            # emits the -1 sentinel (or omits the column) — fail loudly
+            # instead of skipping (regression-pinned by tests/test_exp)
+            checked += 1
+            why = "all sentinel/NaN" if invalid else "metric missing"
+            bad.append(f"{scheme}:{why}")
+            continue
         checked += 1
+        val = sum(vals) / len(vals)
         b = bcell[metric]
         ok = (abs(val - b) <= abs_tol) if abs_tol is not None \
             else _within(val, b, tol if tol is not None else 0.25)
         if not ok:
             bad.append(f"{scheme}:{val} vs {b}")
     if checked == 0:
-        # all overlap between run schemes and the baseline map is gone
-        # (e.g. a --schemes run without ecmp emits no ratio column):
+        # no overlap between run schemes and the baseline map (e.g. a
+        # --schemes run whose schemes the baseline doesn't know):
         # skip — the registered cell still enforces this on full runs
         return dict(ok=True, value=0,
-                    note=f"skipped: no run scheme carries {metric!r} to "
-                         f"compare against {g['path']}")
+                    note=f"skipped: no run scheme appears in {g['path']}")
     return dict(ok=not bad, value=checked,
                 note="; ".join(bad) if bad else f"{checked} schemes OK")
 
@@ -160,15 +229,19 @@ _EVAL = {"counter": _eval_counter, "ratio": _eval_ratio,
 
 def describe(g: dict) -> str:
     kind = g["kind"]
+    scope = ""
+    if g.get("where"):
+        scope = " @ " + ",".join(f"{k}={v}"
+                                 for k, v in sorted(g["where"].items()))
     if kind == "counter":
-        scope = f"[{g['scheme']}]" if g.get("scheme") else "[*]"
-        return f"{scope} {g['metric']} {g.get('op', '==')} {g['value']}"
+        sch = f"[{g['scheme']}]" if g.get("scheme") else "[*]"
+        return f"{sch} {g['metric']} {g.get('op', '==')} {g['value']}{scope}"
     if kind == "ratio":
         return (f"{g['metric']} {g['num']}/{g['den']} "
-                f"{g.get('op', '<=')} {g['value']}")
+                f"{g.get('op', '<=')} {g['value']}{scope}")
     if kind == "baseline":
-        return f"{g['metric']} vs {g['file']}:{g['path']}"
-    return f"{g['metric']} per-scheme vs {g['file']}:{g['path']}"
+        return f"{g['metric']} vs {g['file']}:{g['path']}{scope}"
+    return f"{g['metric']} per-scheme vs {g['file']}:{g['path']}{scope}"
 
 
 def evaluate(guards, rows) -> list[dict]:

@@ -45,16 +45,21 @@ _G_NO_RATE = {"kind": "counter", "metric": "rate_violations",
               "op": "==", "value": 0}
 
 
-def _g_counter(metric, op, value, scheme=None):
+def _g_counter(metric, op, value, scheme=None, where=None):
     g = {"kind": "counter", "metric": metric, "op": op, "value": value}
     if scheme:
         g["scheme"] = scheme
+    if where:
+        g["where"] = where
     return g
 
 
-def _g_ratio(metric, num, den, value, op="<="):
-    return {"kind": "ratio", "metric": metric, "num": num, "den": den,
-            "op": op, "value": value}
+def _g_ratio(metric, num, den, value, op="<=", where=None):
+    g = {"kind": "ratio", "metric": metric, "num": num, "den": den,
+         "op": op, "value": value}
+    if where:
+        g["where"] = where
+    return g
 
 
 def _g_fabric_baseline(topo, cell, metric, **kw):
@@ -403,6 +408,61 @@ def _cells() -> list[Cell]:
                 _g_counter("xratio", ">=", 0.5),
                 _g_counter("xratio", "<=", 2.0)),
     ))
+    # ------------------------------------- open-loop serving sweeps
+    # (DESIGN.md §15): Poisson websearch arrivals at 30/60/90% of
+    # endpoint line rate, windowed steady-state metrics.  The smoke
+    # cell runs the exact packet engine on the small Dragonfly,
+    # segmented at every window boundary via checkpoint/resume; the
+    # ci cell is the paper-instance DF-1056 sweep over every registry
+    # scheme at flow fidelity, with the paper's headline load-curve
+    # claim as a where-scoped ratio guard (spritz p99 <= ecmp p99 at
+    # 90% load).  Sizes are capped (recorded here) so the drain
+    # allowance that de-censors the steady percentiles stays bounded.
+    cells.append(Cell(
+        cell_id="serve.dragonfly.websearch.smoke",
+        figure="load_sweep", bench="serve", engine="openloop",
+        topology="dragonfly", scale="small", workload="poisson_websearch",
+        workload_kw={"fidelity": "packet", "loads": (0.3, 0.6, 0.9),
+                     "horizon_ticks": 512, "size_cap_pkts": 64,
+                     "drain_ticks": 768,
+                     "warmup_frac": 0.25, "window_frac": 0.25,
+                     "seed": 4},
+        schemes=FLOW_SMOKE_SCHEMES, spec_kw={"n_pkt_cap": 1 << 15},
+        tiers=("smoke", "ci"),
+        # the small fabric saturates near 90% offered load — the guard
+        # asserts spritz keeps serving (observed 1.0 vs ecmp 0.93)
+        # and beats ecmp's tail, not that the regime is sub-critical
+        guards=(_G_NO_DOWN,
+                _g_counter("steady_done_frac", ">=", 0.9,
+                           scheme=SPRITZ_W, where={"load": 0.9}),
+                _g_ratio("fct_p99_us", SPRITZ_W, "ecmp", 1.0,
+                         where={"load": 0.9})),
+    ))
+    for scale, tiers, okw in (
+            ("quick", ("ci",),
+             {"horizon_ticks": 552, "size_cap_pkts": 512,
+              "max_flows": 6000}),
+            ("full", ("full",),
+             {"horizon_ticks": 1104, "size_cap_pkts": 1024,
+              "max_flows": 12000})):
+        cells.append(Cell(
+            cell_id=f"serve.dragonfly1056.websearch.{scale}",
+            figure="load_sweep", bench="serve", engine="openloop",
+            topology="dragonfly1056", scale=scale,
+            workload="poisson_websearch",
+            workload_kw=dict({"fidelity": "flow",
+                              "loads": (0.3, 0.6, 0.9),
+                              "warmup_frac": 0.25, "window_frac": 0.25,
+                              "seed": 0, "max_paths": 32}, **okw),
+            tiers=tiers,
+            guards=(_G_NO_RATE,
+                    _g_counter("steady_done_frac", ">=", 0.99,
+                               scheme=SPRITZ_W, where={"load": 0.9}),
+                    _g_ratio("fct_p99_us", SPRITZ_W, "ecmp", 1.0,
+                             where={"load": 0.9}),
+                    _g_ratio("fct_p99_us", SPRITZ_W, "ecmp", 1.0,
+                             where={"load": 0.3})),
+        ))
     cells.append(Cell(
         cell_id="fabric.dragonfly1056.chaos.quick",
         figure="chaos_tier", bench="fabric", engine="flow",

@@ -23,14 +23,23 @@ from repro.exp.workloads import build_failure, build_workload, make_topology
 
 
 def fct_stats(res, mask=None, prefix=""):
+    """Completed-flow FCT statistics over ``mask``.  Empty samples emit
+    the explicit ``-1.0`` sentinel (``repro.net.steady.EMPTY``), never
+    NaN — guards fail on present-but-sentinel metrics."""
     sel = np.ones(len(res.fct_ticks), bool) if mask is None else mask
     fct = B.ticks_to_us(res.fct_ticks[sel])
     done = res.done[sel]
+
+    def pct(q):
+        return float(np.percentile(fct[done], q)) if done.any() else -1.0
+
     return {
-        f"{prefix}done_frac": float(done.mean()) if sel.any() else -1,
-        f"{prefix}fct_mean_us": float(fct[done].mean()) if done.any() else -1,
-        f"{prefix}fct_p50_us": float(np.percentile(fct[done], 50)) if done.any() else -1,
-        f"{prefix}fct_p99_us": float(np.percentile(fct[done], 99)) if done.any() else -1,
+        f"{prefix}done_frac": float(done.mean()) if sel.any() else -1.0,
+        f"{prefix}fct_mean_us": (float(fct[done].mean())
+                                 if done.any() else -1.0),
+        f"{prefix}fct_p50_us": pct(50),
+        f"{prefix}fct_p99_us": pct(99),
+        f"{prefix}fct_p999_us": pct(99.9),
         f"{prefix}trims": int(res.trims[sel].sum()),
         f"{prefix}timeouts": int(res.timeouts[sel].sum()),
         f"{prefix}retx": int(res.retx[sel].sum()),

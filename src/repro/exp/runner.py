@@ -81,6 +81,10 @@ def _execute(cell, schemes, verbose):
         from repro.exp.cross import run_cross_cell
         return run_cross_cell(cell, schemes, list(cell.seeds),
                               verbose=verbose)
+    if cell.engine == "openloop":
+        from repro.exp.openloop import run_openloop_cell
+        return run_openloop_cell(cell, schemes, list(cell.seeds),
+                                 verbose=verbose)
     from repro.exp.host import run_host_cell
     return run_host_cell(cell, schemes, list(cell.seeds), verbose=verbose)
 

@@ -26,8 +26,10 @@ TIERS = ("smoke", "ci", "chaos", "full")
 # flowsim.simulate_batch, "cross" = the same flow set through BOTH
 # engines with per-scheme cross-engine FCT ratios (DESIGN.md §14),
 # "host" = host-side analytic cells (path/memory model — no simulator
-# run).
-ENGINES = ("packet", "flow", "cross", "host")
+# run), "openloop" = offered-load sweep serving cells (DESIGN.md §15:
+# Poisson arrival streams + windowed steady-state metrics, at flow or
+# packet fidelity per the cell's workload_kw).
+ENGINES = ("packet", "flow", "cross", "host", "openloop")
 
 # scales a CLI --scale override may retarget per engine.  Packet/host
 # scale picks only the topology size; flow and cross cells'
@@ -40,11 +42,15 @@ ENGINES = ("packet", "flow", "cross", "host")
 SCALES_BY_ENGINE = {"packet": ("small", "mid", "full"),
                     "flow": (),
                     "cross": (),
-                    "host": ("small", "mid", "full")}
+                    "host": ("small", "mid", "full"),
+                    "openloop": ()}
 
 RESULT_SCHEMA_VERSION = 1
 
-# guard kinds understood by repro.exp.guards.evaluate
+# guard kinds understood by repro.exp.guards.evaluate (that module's
+# docstring specifies each kind's fields; every kind additionally
+# accepts ``where`` — a row filter, e.g. {"where": {"load": 0.9}} —
+# and ``counter``/``baseline`` accept a ``scheme`` scope)
 GUARD_KINDS = ("counter", "ratio", "baseline", "baseline_schemes")
 
 
@@ -52,12 +58,49 @@ GUARD_KINDS = ("counter", "ratio", "baseline", "baseline_schemes")
 class Cell:
     """One experiment-matrix cell.  Everything is plain data — the cell
     spec (via :meth:`to_json`) is part of the result content-hash, so
-    any edit invalidates the cached result."""
+    any edit invalidates the cached result.
+
+    Field contract (what a new cell must get right):
+
+    * ``cell_id`` — unique dotted name, conventionally
+      ``bench.topology.workload[.failure].scale``; it is the result
+      file name under ``results/exp/``.
+    * ``engine`` — dispatch kind from :data:`ENGINES`; picks the
+      executor module (``repro.exp.packet`` / ``flow`` / ``cross`` /
+      ``host`` / ``openloop``).
+    * ``topology``/``scale`` — a key of
+      ``repro.exp.workloads.make_topology``'s table.  A CLI
+      ``--scale`` override only retargets when both the requested and
+      the registered scale appear in :data:`SCALES_BY_ENGINE` for the
+      cell's engine (flow/cross/openloop cells are pinned: their scale
+      is entangled with ``workload_kw``).
+    * ``workload``/``workload_kw`` — builder name plus its kwargs.
+      Packet cells resolve through ``repro.exp.workloads``; flow cells
+      name a collective kind for ``bridge.cell_flows``; openloop cells
+      use ``workload_kw`` for the sweep itself (``fidelity``,
+      ``loads``, ``horizon_ticks``, ``warmup_frac``, ``window_frac``,
+      ``size``, ``size_cap_pkts``, ``drain_ticks`` — see
+      ``repro.exp.openloop._kw``).
+    * ``schemes`` — registry names; ``()`` means every registered
+      scheme, resolved at run time in registry order.
+    * ``failure``/``failure_kw`` — failure-plan builder (packet:
+      ``repro.exp.workloads.FAILURES``; flow:
+      ``repro.exp.flow._failure_plan``); ``None`` = healthy run.
+    * ``seeds`` — engine seeds; every scheme runs every seed and rows
+      carry ``seed`` so guards average over them.
+    * ``n_ticks``/``spec_kw`` — packet-engine tick budget and
+      ``build_spec`` kwargs (plus the pseudo-keys ``with_dense_ref``
+      and ``with_healthy_ref`` the packet executor consumes).
+    * ``tiers`` — which of :data:`TIERS` select the cell.
+    * ``guards`` — mappings with a ``kind`` from :data:`GUARD_KINDS`;
+      evaluated by ``repro.exp.guards.evaluate`` over the emitted rows
+      (ratios and counters only — never absolute wall time).
+    """
 
     cell_id: str                      # unique, dotted: bench.topo.workload[.failure].scale
     figure: str                       # DESIGN.md §8 paper artifact id
     bench: str                        # owning legacy bench module ("micro", ...)
-    engine: str                       # "packet" | "flow" | "host"
+    engine: str                       # one of ENGINES
     topology: str                     # "dragonfly" | "slimfly" | "dragonfly1056" | ...
     scale: str                        # "small" | "mid" | "full" | "quick"
     workload: str                     # builder name (repro.exp.workloads / flow cell kind)

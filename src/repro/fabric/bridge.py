@@ -116,7 +116,9 @@ def collective_time_us(topo: Topology, spec: CollectiveSpec, scheme,
                                spec.bytes_per_rank)
     res = FS.simulate(topo, flows, scheme, seed=seed)
     done = res.fct[res.fct >= 0]       # fct is relative to start; 0 is done
-    t_bytes = float(done.max()) if len(done) else float("nan")
+    # empty == the explicit -1.0 sentinel, never NaN: a sentinel FAILS
+    # downstream guards, a NaN would silently pass them (steady.EMPTY)
+    t_bytes = float(done.max()) if len(done) else -BYTES_PER_US
     return {"fct_us": t_bytes / BYTES_PER_US,
             "reselections": res.reselections,
             "epochs": res.epochs}
@@ -186,7 +188,8 @@ def fabric_report(topo: Topology, kind: str, shard_bytes: float,
                               max_paths=max_paths)
     for name, (res,) in sweep.items():
         done = res.fct[res.fct >= 0]
-        t_bytes = float(done.max()) if len(done) else float("nan")
+        # -1.0 sentinel, never NaN (see collective_time_us)
+        t_bytes = float(done.max()) if len(done) else -BYTES_PER_US
         out[name] = {
             "fct_us": t_bytes / BYTES_PER_US,
             "done_frac": float((res.fct >= 0).mean()),
@@ -227,8 +230,8 @@ def _packet_report(topo: Topology, flows: list[FS.FlowSpec], schemes,
     out = {}
     for scheme, res in zip(schemes, results):
         done = res.fct_ticks[res.done]
-        fct_us = (float(done.max()) * TICK_NS / 1e3) if len(done) else \
-            float("nan")
+        # -1.0 sentinel, never NaN (see collective_time_us)
+        fct_us = (float(done.max()) * TICK_NS / 1e3) if len(done) else -1.0
         out[REG.resolve(scheme).name] = {
             "fct_us": fct_us,
             "done_frac": float(res.done.mean()),

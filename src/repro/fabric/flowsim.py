@@ -342,8 +342,8 @@ def _compile_plan(topo: Topology, failure_plan):
 def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
              seed: int = 0, w_scale: float = 3.0, max_paths: int = 64,
              hot_frac: float = 0.85, max_epochs: int = 100000,
-             failure_plan=None, table: FlowTable | None = None
-             ) -> FlowResult:
+             failure_plan=None, table: FlowTable | None = None,
+             t_end: float | None = None) -> FlowResult:
     """Run the flow-level simulation for one registry scheme.
 
     ``scheme`` is a registry name / code / PolicyDef; its
@@ -352,6 +352,12 @@ def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
     (:func:`simulate_batch` does this).  ``failure_plan`` is a
     ``FailureSchedule`` or compiled ``FailurePlan`` in ticks; events
     convert to byte-times via ``BYTES_PER_TICK``.
+
+    ``t_end`` (byte-time) is the open-loop serving horizon (DESIGN.md
+    §15): instead of running to drain, the epoch loop stops once time
+    reaches it — arrivals admit epoch-batched up to the horizon, flows
+    still in flight keep ``fct == -1`` and land in the windowed stats'
+    ``censored`` count rather than distorting run-to-drain metrics.
     """
     rule = _registry().flow_rule(scheme)
     table = table if table is not None else build_flow_table(
@@ -403,6 +409,8 @@ def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
         apply_due_events(0.0)   # tick <= 0 events are initial conditions
 
     for epoch in range(max_epochs):
+        if t_end is not None and t >= t_end - 1e-9:
+            break                       # open-loop horizon reached
         if plan is not None:
             apply_due_events(t)
         next_ev = float(plan[0][ev_i]) if plan is not None \
@@ -537,6 +545,10 @@ def simulate(topo: Topology, flows: list[FlowSpec], scheme, *,
             dt = min(dt, float(future.min()) - t)
         if next_ev is not None:
             dt = min(dt, next_ev - t)
+        if t_end is not None:
+            # clamp the fill interval at the serving horizon: completions
+            # exactly at t_end still record, the next epoch breaks
+            dt = min(dt, t_end - t)
         remaining = remaining - rates * dt
         t += dt
         done_now = active & (remaining <= 1e-9) & ~done
@@ -554,7 +566,8 @@ def simulate_batch(topo: Topology, flows: list[FlowSpec], schemes,
                    seeds=(0,), *, w_scale: float = 3.0,
                    max_paths: int = 64, hot_frac: float = 0.85,
                    max_epochs: int = 100000, failure_plan=None,
-                   table: FlowTable | None = None
+                   table: FlowTable | None = None,
+                   t_end: float | None = None
                    ) -> dict[str, list[FlowResult]]:
     """Scheme x seed sweep over ONE shared :class:`FlowTable`.
 
@@ -577,6 +590,6 @@ def simulate_batch(topo: Topology, flows: list[FlowSpec], schemes,
             simulate(topo, flows, name, seed=seed, w_scale=w_scale,
                      max_paths=max_paths, hot_frac=hot_frac,
                      max_epochs=max_epochs, failure_plan=failure_plan,
-                     table=table)
+                     table=table, t_end=t_end)
             for seed in seeds]
     return out

@@ -76,12 +76,15 @@ def all_policies() -> tuple[PB.PolicyDef, ...]:
 
 
 def by_code(code: int) -> PB.PolicyDef:
+    """Lookup by integer scheme code (the spec/CSV ABI; ``sim.types``)."""
     if not 0 <= code < len(_POLICIES):
         raise ValueError(f"unknown scheme code {code}")
     return _POLICIES[code]
 
 
 def by_name(name: str) -> PB.PolicyDef:
+    """Lookup by registered name (e.g. ``"spritz_spray_w"``); raises
+    ``ValueError`` listing the known names on a miss."""
     try:
         return _BY_NAME[name]
     except KeyError:
@@ -100,18 +103,25 @@ def resolve(scheme) -> PB.PolicyDef:
 
 
 def as_code(scheme) -> int:
+    """Name / PolicyDef / legacy int -> canonical scheme code."""
     return resolve(scheme).code
 
 
 def as_codes(schemes: Iterable) -> list[int]:
+    """Vectorized :func:`as_code` over any scheme-reference iterable."""
     return [as_code(s) for s in schemes]
 
 
 def names() -> list[str]:
+    """All registered scheme names in code order — the canonical 'all
+    schemes' set (``repro.exp`` cells with ``schemes=()`` expand to
+    this)."""
     return [p.name for p in _POLICIES]
 
 
 def failover_policies() -> tuple[PB.PolicyDef, ...]:
+    """Schemes declared able to adapt around failures — the scheme set
+    the failure benchmarks and chaos-tier cells sweep."""
     return tuple(p for p in _POLICIES if p.failover)
 
 

@@ -790,16 +790,29 @@ def init_carry(spec: SimSpec, seed: int = 0,
 def _make_loop(spec: SimSpec, *, dense: bool, batched: bool):
     """Device-side driver: while_loop until budget exhausted or all watched
     flows complete.  ``dense=True`` steps every tick (reference stepper);
-    otherwise the next tick is the event horizon."""
+    otherwise the next tick is the event horizon.
+
+    ``t0``/``steps0`` seed the loop counters (-1/0 for a fresh run; a
+    checkpoint's values on resume) and ``limit`` is the segment bound:
+    the loop stops at the first state whose tick has reached ``limit``.
+    Because a segment stops *between* body iterations, its final
+    ``(carry, t, steps)`` is exactly an intermediate state of the
+    unsegmented run — resume is bit-identical by construction (the
+    alternative, rebuilding the spec with a smaller ``n_ticks``, would
+    clamp a horizon event landing exactly on the boundary out of the
+    segment and lose it on resume).  All three are traced scalars, so
+    segment boundaries never retrace the driver.
+    """
     tick = build_tick(spec, batched=batched)
     hor = None if dense else build_horizon(spec)
     n_ticks = jnp.int32(spec.n_ticks)
 
-    def loop(carry: Carry, watch, lane: Lane | None = None):
+    def loop(carry: Carry, watch, t0, steps0, limit,
+             lane: Lane | None = None):
         def cond(s):
             c, t, steps = s
             done = jnp.all(jnp.where(watch, c.fct >= 0, True))
-            return (t < n_ticks) & ~done
+            return (t < n_ticks) & (t < limit) & ~done
 
         def body(s):
             c, t, steps = s
@@ -810,8 +823,7 @@ def _make_loop(spec: SimSpec, *, dense: bool, batched: bool):
             c = _tree_select(ex, c2, c)
             return (c, jnp.where(ex, h, n_ticks), steps + ex.astype(jnp.int32))
 
-        return jax.lax.while_loop(
-            cond, body, (carry, jnp.int32(-1), jnp.int32(0)))
+        return jax.lax.while_loop(cond, body, (carry, t0, steps0))
 
     return loop
 
@@ -846,8 +858,12 @@ def _runner(spec: SimSpec, *, dense: bool, batched: bool, shard: int = 0):
     if runner is None:
         loop = _make_loop(spec, dense=dense, batched=batched)
         if batched:
-            vloop = jax.vmap(lambda c, w, ln: loop(c, w, ln),
-                             in_axes=(0, None, 0))
+            # per-lane loop counters (t0/steps0) so a batched resume can
+            # restart every lane from its own stopped tick; the segment
+            # limit is shared
+            vloop = jax.vmap(lambda c, w, t0, s0, lim, ln:
+                             loop(c, w, t0, s0, lim, ln),
+                             in_axes=(0, None, 0, 0, None, 0))
             if shard > 1:
                 # split the lane axis across devices (DESIGN.md §5): each
                 # device runs the identical vmapped driver over its lane
@@ -859,12 +875,14 @@ def _runner(spec: SimSpec, *, dense: bool, batched: bool, shard: int = 0):
                 mesh = Mesh(np.asarray(jax.devices()[:shard]), ("lanes",))
                 vloop = shard_map(
                     vloop, mesh=mesh,
-                    in_specs=(PS("lanes"), PS(), PS("lanes")),
+                    in_specs=(PS("lanes"), PS(), PS("lanes"), PS("lanes"),
+                              PS(), PS("lanes")),
                     out_specs=(PS("lanes"), PS("lanes"), PS("lanes")),
                     check_rep=False)
             runner = jax.jit(vloop, donate_argnums=(0,))
         else:
-            runner = jax.jit(lambda c, w: loop(c, w), donate_argnums=(0,))
+            runner = jax.jit(lambda c, w, t0, s0, lim:
+                             loop(c, w, t0, s0, lim), donate_argnums=(0,))
         if len(_RUNNER_CACHE) >= _RUNNER_CACHE_MAX:
             _RUNNER_CACHE.pop(next(iter(_RUNNER_CACHE)))
         _RUNNER_CACHE[key] = runner
@@ -921,9 +939,58 @@ def _carry_state(carry: Carry) -> dict:
     return state
 
 
+class Checkpoint(NamedTuple):
+    """A resumable engine snapshot: the nested-NumPy carry state (the
+    ``_carry_state`` form ``return_carry=True`` emits) plus the loop
+    counters.  ``run(spec, resume=cp)`` continues the while_loop from
+    exactly this state; segmenting a long-horizon run over
+    ``until_tick`` boundaries is bit-identical to the unsegmented run
+    (pinned by tests/test_arrivals.py)."""
+
+    state: dict   # nested numpy carry (incl. the stacked policy dict)
+    t: int        # ticks simulated so far (the loop's current tick)
+    steps: int    # horizon steps executed so far
+
+
+def checkpoint(res: SimResult, state: dict) -> Checkpoint:
+    """Pair a ``return_carry=True`` result with its carry state."""
+    return Checkpoint(state=state, t=int(res.ticks_simulated),
+                      steps=int(res.steps_executed))
+
+
+def _carry_from_state(spec: SimSpec, state: dict) -> Carry:
+    """Rebuild a device carry from a checkpoint's nested-NumPy state:
+    an ``init_carry`` template supplies structure and dtypes, the
+    stored arrays supply values (fresh buffers — safe to donate)."""
+    tmpl = init_carry(spec, 0)
+
+    def leaf(arr, ref):
+        a = np.asarray(arr)
+        if a.shape != ref.shape:
+            raise ValueError(
+                f"checkpoint leaf shape {a.shape} != spec's {ref.shape} "
+                "— resume requires the identical SimSpec")
+        return jnp.asarray(a, ref.dtype)
+
+    vals = {}
+    for k in Carry._fields:
+        ref = getattr(tmpl, k)
+        if k == "policy":
+            vals[k] = {
+                fam: type(sub)(**{f: leaf(state["policy"][fam][f],
+                                          getattr(sub, f))
+                                  for f in sub._fields})
+                for fam, sub in ref.items()}
+        else:
+            vals[k] = leaf(state[k], ref)
+    return Carry(**vals)
+
+
 def run(spec: SimSpec, seed: int = 0, chunk: int | None = None,
         stop_flows: np.ndarray | None = None,
-        reference: bool = False, return_carry: bool = False):
+        reference: bool = False, return_carry: bool = False,
+        until_tick: int | None = None,
+        resume: Checkpoint | None = None):
     """Run the simulation for up to ``spec.n_ticks`` virtual ticks.
 
     The driver is a single donated device-side while_loop that stops as
@@ -934,15 +1001,33 @@ def run(spec: SimSpec, seed: int = 0, chunk: int | None = None,
     host loop any more.  ``return_carry=True`` additionally returns the
     final :class:`Carry` as nested NumPy dicts (``tests/test_failures.py``
     audits conservation/conformance through it).
+
+    ``until_tick`` stops the segment once the loop's tick reaches it
+    (a traced bound — no recompile per boundary); ``resume`` continues
+    from a :class:`Checkpoint` built over the *same* spec.  Pair them
+    to segment a long-horizon open-loop run::
+
+        res, st = run(spec, seed, until_tick=W, return_carry=True)
+        res, st = run(spec, resume=checkpoint(res, st),
+                      until_tick=2 * W, return_carry=True)
+
+    which is bit-identical to one unsegmented call (DESIGN.md §15).
     """
     del chunk
     watch = jnp.asarray(_watch_mask(spec, stop_flows))
     runner = _runner(spec, dense=reference, batched=False)
+    if resume is not None:
+        carry0 = _carry_from_state(spec, resume.state)
+        t0, steps0 = int(resume.t), int(resume.steps)
+    else:
+        carry0, t0, steps0 = init_carry(spec, seed), -1, 0
+    limit = spec.n_ticks if until_tick is None else int(until_tick)
     with warnings.catch_warnings():
         # donation is a no-op on CPU; the advisory warning is noise there
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
-        carry, t, steps = runner(init_carry(spec, seed), watch)
+        carry, t, steps = runner(carry0, watch, jnp.int32(t0),
+                                 jnp.int32(steps0), jnp.int32(limit))
     res = _result(carry, t, steps)
     if return_carry:
         return res, _carry_state(carry)
@@ -975,7 +1060,9 @@ def run_batch(spec: SimSpec | Sequence[SimSpec],
               stop_flows: np.ndarray | None = None,
               reference: bool = False,
               return_carry: bool = False,
-              shard: bool | None = None):
+              shard: bool | None = None,
+              until_tick: int | None = None,
+              resume: Sequence[Checkpoint] | None = None):
     """Batched driver: one compiled program for a scheme x seed sweep.
 
     Either pass one base ``spec`` plus ``schemes`` (registry names or
@@ -993,6 +1080,13 @@ def run_batch(spec: SimSpec | Sequence[SimSpec],
     lane count is padded to a device multiple by replicating lane 0 (pad
     results are dropped); per-lane results are bit-identical either way
     because lanes never communicate.
+
+    ``until_tick`` bounds the segment for every lane (lanes stop at
+    their own first tick past the bound — horizon jumps differ per
+    lane); ``resume`` takes one :class:`Checkpoint` per lane, in the
+    same scheme-major, seed-minor order, from a previous segmented call
+    with the identical spec/schemes/seeds.  Segmenting is bit-identical
+    to one unsegmented call, exactly as in :func:`run`.
     """
     if isinstance(spec, SimSpec):
         if schemes is None:
@@ -1022,28 +1116,45 @@ def run_batch(spec: SimSpec | Sequence[SimSpec],
     lanes_flat = [(s, w, p, seed)
                   for (s, w, p) in lane_specs for seed in seeds]
     n_lanes = len(lanes_flat)
+    if resume is not None and len(resume) != n_lanes:
+        raise ValueError(f"resume needs one Checkpoint per lane: got "
+                         f"{len(resume)} for {n_lanes} lanes")
+    cps = list(resume) if resume is not None else None
     ndev = jax.device_count()
     if shard is None:
         shard = ndev > 1 and n_lanes > 1
     n_shard = ndev if shard else 0
     if n_shard > 1 and n_lanes % n_shard:
-        lanes_flat = lanes_flat + lanes_flat[:1] * (-n_lanes % n_shard)
+        pad = -n_lanes % n_shard
+        lanes_flat = lanes_flat + lanes_flat[:1] * pad
+        if cps is not None:
+            cps = cps + cps[:1] * pad
     lanes = Lane(
         scheme=jnp.asarray([s for s, _, _, _ in lanes_flat], jnp.int32),
         weights=jnp.asarray(np.stack([w for _, w, _, _ in lanes_flat])),
         static_path=jnp.asarray(np.stack([p for _, _, p, _ in lanes_flat])),
     )
-    carries = [init_carry(base, seed, weights=w, static_path=p)
-               for (_, w, p, seed) in lanes_flat]
+    if cps is not None:
+        carries = [_carry_from_state(base, cp.state) for cp in cps]
+        t0 = np.asarray([cp.t for cp in cps], np.int32)
+        steps0 = np.asarray([cp.steps for cp in cps], np.int32)
+    else:
+        carries = [init_carry(base, seed, weights=w, static_path=p)
+                   for (_, w, p, seed) in lanes_flat]
+        t0 = np.full(len(lanes_flat), -1, np.int32)
+        steps0 = np.zeros(len(lanes_flat), np.int32)
     carry0 = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
     watch = jnp.asarray(_watch_mask(base, stop_flows))
+    limit = base.n_ticks if until_tick is None else int(until_tick)
 
     runner = _runner(base, dense=reference, batched=True, shard=n_shard)
     with warnings.catch_warnings():
         # donation is a no-op on CPU; the advisory warning is noise there
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
-        carry, t, steps = runner(carry0, watch, lanes)
+        carry, t, steps = runner(carry0, watch, jnp.asarray(t0),
+                                 jnp.asarray(steps0), jnp.int32(limit),
+                                 lanes)
     out, states = [], []
     for i in range(n_lanes):  # pad lanes (lane-0 replicas) are dropped
         lane_carry = jax.tree.map(lambda x: x[i], carry)

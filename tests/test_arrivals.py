@@ -1,0 +1,264 @@
+"""Open-loop arrivals + steady-state windowing (DESIGN.md §15).
+
+Pins the tentpole invariants: folded per-endpoint arrival substreams
+(subset == full-fabric slice, bit-exact), sentinel — never NaN —
+empty-window statistics, warmup-exclusion semantics, a Little's-law
+sanity check at low load through the flow engine, and checkpoint/
+resume bit-identity across a window boundary in the packet engine
+(solo and batched)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.net.arrivals import poisson_stream, trace_stream
+from repro.net.steady import (EMPTY, mean_inflight, percentile_or_empty,
+                              queue_depth_ticks, window_stats)
+from repro.net.topology.base import BYTES_PER_TICK
+from repro.net.topology.dragonfly import make_dragonfly
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return make_dragonfly(4, 2, 2)
+
+
+# ------------------------------------------------------------- arrivals
+
+def test_stream_deterministic_and_seeded(topo):
+    a = poisson_stream(topo, load=0.3, horizon_ticks=256, seed=3,
+                       size="websearch", size_cap_pkts=32)
+    b = poisson_stream(topo, load=0.3, horizon_ticks=256, seed=3,
+                       size="websearch", size_cap_pkts=32)
+    for f in ("src_ep", "dst_ep", "size_pkts", "start_tick"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    c = poisson_stream(topo, load=0.3, horizon_ticks=256, seed=4,
+                       size="websearch", size_cap_pkts=32)
+    assert not (a.n_flows == c.n_flows
+                and np.array_equal(a.start_tick, c.start_tick))
+    assert np.all(np.diff(a.start_tick) >= 0)          # canonical order
+    assert np.all(a.dst_ep != a.src_ep)
+    assert np.all(a.size_pkts >= 1) and np.all(a.size_pkts <= 32)
+
+
+def test_endpoint_substreams_fold_independently(topo):
+    """A subset's arrivals are bit-identical to the same endpoints
+    inside the full-fabric stream — the host mirror of the engine's
+    fold_in(rng, t) discipline."""
+    full = poisson_stream(topo, load=0.5, horizon_ticks=256, seed=7,
+                          size="websearch", size_cap_pkts=64)
+    sub = poisson_stream(topo, load=0.5, horizon_ticks=256, seed=7,
+                         size="websearch", size_cap_pkts=64,
+                         endpoints=[5, 17])
+    for ep in (5, 17):
+        fm, sm = full.src_ep == ep, sub.src_ep == ep
+        np.testing.assert_array_equal(full.start_tick[fm],
+                                      sub.start_tick[sm])
+        np.testing.assert_array_equal(full.dst_ep[fm], sub.dst_ep[sm])
+        np.testing.assert_array_equal(full.size_pkts[fm],
+                                      sub.size_pkts[sm])
+
+
+def test_offered_load_tracks_request(topo):
+    """Rate sizing uses the capped mean, so the realized offered load
+    tracks the request even with a clipped elephant tail."""
+    s = poisson_stream(topo, load=0.6, horizon_ticks=4096, seed=0,
+                       size="websearch", size_cap_pkts=256)
+    assert s.offered_load(topo.n_endpoints) == pytest.approx(0.6, rel=0.2)
+    f = poisson_stream(topo, load=0.5, horizon_ticks=4096, seed=0, size=8)
+    assert f.offered_load(topo.n_endpoints) == pytest.approx(0.5, rel=0.1)
+    assert np.all(f.size_pkts == 8)
+
+
+def test_max_flows_shrinks_horizon_not_coverage(topo):
+    s = poisson_stream(topo, load=0.9, horizon_ticks=4096, seed=1,
+                       size="websearch", size_cap_pkts=64, max_flows=500)
+    assert s.truncated and s.n_flows == 500
+    assert s.horizon_ticks == int(s.start_tick[-1]) < 4096
+    # coverage stays complete: every arrival up to the shrunk horizon
+    # from the untruncated stream is present
+    full = poisson_stream(topo, load=0.9, horizon_ticks=4096, seed=1,
+                          size="websearch", size_cap_pkts=64)
+    kept = full.start_tick <= s.horizon_ticks
+    assert kept.sum() == pytest.approx(500, abs=len(
+        full.start_tick[full.start_tick == s.horizon_ticks]))
+
+
+def test_trace_stream_sorts_and_validates():
+    t = trace_stream([1, 0], [0, 1], [4, 2], [9, 3])
+    np.testing.assert_array_equal(t.start_tick, [3, 9])
+    np.testing.assert_array_equal(t.src_ep, [0, 1])
+    assert t.horizon_ticks == 9
+    with pytest.raises(ValueError):
+        trace_stream([0], [1], [0], [1])      # non-positive size
+    with pytest.raises(ValueError):
+        trace_stream([0, 1], [1], [1], [1])   # ragged arrays
+
+
+def test_materializations_carry_identical_wire_volume(topo):
+    s = poisson_stream(topo, load=0.2, horizon_ticks=64, seed=2,
+                       size="websearch", size_cap_pkts=16)
+    pf = s.to_packet_flows()
+    ff = s.to_flowspecs()
+    assert len(pf) == len(ff) == s.n_flows
+    for p, f, z, t in zip(pf, ff, s.size_pkts, s.start_tick):
+        assert p.size_pkts == int(z) and p.start_tick == int(t)
+        assert f.size_bytes == float(z) * BYTES_PER_TICK
+        assert f.start == float(t) * BYTES_PER_TICK
+
+
+# ------------------------------------------------- windowed steady state
+
+def test_empty_stats_are_sentinel_never_nan():
+    """Satellite regression: an empty completed-flow filter used to
+    yield NaN (which silently passes comparisons); it must be the
+    explicit EMPTY sentinel that fails guards loudly."""
+    assert percentile_or_empty([], 99) == EMPTY == -1.0
+    ws = window_stats(np.array([10.0]), np.array([-1.0]), np.array([4.0]),
+                      warmup=0.0, window=50.0, horizon=100.0)
+    st = ws["steady"]
+    for k in ("fct_p50", "fct_p99", "fct_p999", "fct_mean"):
+        assert st[k] == EMPTY
+        assert not np.isnan(st[k])
+        for w in ws["windows"]:
+            assert w[k] == EMPTY
+    assert st["censored"] == 1 and st["n_done"] == 0
+
+
+def test_window_stats_warmup_exclusion():
+    start = np.array([5.0, 20.0, 30.0, 95.0])
+    fct = np.array([3.0, 10.0, -1.0, 4.0])
+    size = np.ones(4)
+    ws = window_stats(start, fct, size, warmup=10.0, window=45.0,
+                      horizon=100.0)
+    st = ws["steady"]
+    # arrival-selected: the pre-warmup flow is excluded, the censored
+    # in-span flow is counted, the flow completing past the horizon
+    # still contributes its FCT
+    assert st["n_arrivals"] == 3
+    assert st["n_done"] == 2 and st["censored"] == 1
+    assert st["fct_mean"] == pytest.approx(7.0)
+    # deterministic: identical inputs, identical output
+    assert window_stats(start, fct, size, warmup=10.0, window=45.0,
+                        horizon=100.0) == ws
+    # the pre-warmup flow's FCT never leaks into the steady block
+    fct2 = fct.copy()
+    fct2[0] = 900.0
+    st2 = window_stats(start, fct2, size, warmup=10.0, window=45.0,
+                       horizon=100.0)["steady"]
+    assert st2 == st
+    # windows are completion-bucketed and tile [warmup, horizon)
+    assert [(w["t0"], w["t1"]) for w in ws["windows"]] == \
+        [(10.0, 55.0), (55.0, 100.0)]
+    assert ws["windows"][0]["n_done"] == 1          # 20 + 10 lands at 30
+    with pytest.raises(ValueError):
+        window_stats(start, fct, size, warmup=100.0, window=10.0,
+                     horizon=100.0)
+    with pytest.raises(ValueError):
+        window_stats(start, fct, size, warmup=0.0, window=0.0,
+                     horizon=100.0)
+
+
+def test_mean_inflight_overlap():
+    start = np.array([0.0, 5.0])
+    fct = np.array([10.0, -1.0])     # second never finishes: open-ended
+    got = mean_inflight(start, fct, 0.0, 10.0)
+    assert got == pytest.approx((10.0 + 5.0) / 10.0)
+
+
+def test_queue_depth_snapshot():
+    d = queue_depth_ticks(np.array([100, 80, 10]), 50.0)
+    assert d["max"] == 50.0 and d["mean"] == pytest.approx(80.0 / 3)
+    assert queue_depth_ticks(np.array([]), 0.0)["p99"] == EMPTY
+
+
+def test_littles_law_low_load(topo):
+    """Mean in-flight ≈ arrival rate x mean FCT in the stationary
+    regime (flow engine, 10% offered load)."""
+    from repro.fabric import flowsim as FS
+    s = poisson_stream(topo, load=0.1, horizon_ticks=2048, seed=5,
+                       size="websearch", size_cap_pkts=64)
+    specs = s.to_flowspecs()
+    hz_b = float(s.horizon_ticks) * BYTES_PER_TICK
+    res = FS.simulate(topo, specs, "ecmp", seed=0, max_paths=16,
+                      t_end=hz_b * 2)
+    start = np.asarray([f.start for f in specs])
+    fct = np.asarray(res.fct)
+    warmup = 0.25 * hz_b
+    ws = window_stats(start, fct, np.asarray([f.size_bytes for f in specs]),
+                      warmup=warmup, window=0.25 * hz_b, horizon=hz_b)
+    st = ws["steady"]
+    assert st["done_frac"] == 1.0          # low load: everything drains
+    rate = st["n_arrivals"] / st["span"]
+    inflight = mean_inflight(start, fct, warmup, hz_b)
+    assert inflight == pytest.approx(rate * st["fct_mean"], rel=0.2)
+
+
+# ------------------------------------- checkpoint/resume bit-identity
+
+@pytest.fixture(scope="module")
+def packet_spec(topo):
+    from repro.net.sim import build as B
+    from repro.net.sim.types import SPRAY_W
+    s = poisson_stream(topo, load=0.3, horizon_ticks=256, seed=4,
+                       size="websearch", size_cap_pkts=32)
+    return B.build_spec(topo, s.to_packet_flows(), SPRAY_W,
+                        n_ticks=448, seed=0)
+
+
+def _assert_same(a, b):
+    np.testing.assert_array_equal(a.fct_ticks, b.fct_ticks)
+    assert a.ticks_simulated == b.ticks_simulated
+    assert a.steps_executed == b.steps_executed
+    assert a.down_violations == b.down_violations
+
+
+def test_resume_bit_identical_solo(packet_spec):
+    """Segmenting at a window boundary via checkpoint/resume must be
+    bit-identical to the unsegmented run — the §15 invariant every
+    long-horizon open-loop cell rests on."""
+    from repro.net.sim import engine as E
+    full, full_state = E.run(packet_spec, seed=0, return_carry=True)
+    res, st = E.run(packet_spec, seed=0, until_tick=128,
+                    return_carry=True)
+    assert res.ticks_simulated >= 128       # stopped at the boundary
+    assert res.ticks_simulated < full.ticks_simulated
+    res2, st2 = E.run(packet_spec, resume=E.checkpoint(res, st),
+                      return_carry=True)
+    _assert_same(full, res2)
+    for k, v in full_state.items():
+        if k == "policy":
+            for fam, sub in v.items():
+                for f, x in sub.items():
+                    np.testing.assert_array_equal(
+                        x, st2["policy"][fam][f], err_msg=f"{fam}.{f}")
+        elif k != "spritz":       # pre-refactor alias of policy["spritz"]
+            np.testing.assert_array_equal(v, st2[k], err_msg=k)
+
+
+def test_resume_bit_identical_batched(packet_spec):
+    from repro.net.sim import engine as E
+    schemes = ["ecmp", "spritz_spray_w"]
+    seeds = [0, 1]
+    full = E.run_batch(packet_spec, schemes=schemes, seeds=seeds)
+    res, states = E.run_batch(packet_spec, schemes=schemes, seeds=seeds,
+                              until_tick=128, return_carry=True)
+    cps = [E.checkpoint(r, s) for r, s in zip(res, states)]
+    res2 = E.run_batch(packet_spec, schemes=schemes, seeds=seeds,
+                       resume=cps)
+    assert len(full) == len(res2) == 4
+    for a, b in zip(full, res2):
+        _assert_same(a, b)
+
+
+def test_resume_rejects_mismatched_spec(topo, packet_spec):
+    from repro.net.sim import build as B
+    from repro.net.sim import engine as E
+    from repro.net.sim.types import SPRAY_W
+    res, st = E.run(packet_spec, seed=0, until_tick=64, return_carry=True)
+    other = poisson_stream(topo, load=0.3, horizon_ticks=128, seed=9,
+                           size="websearch", size_cap_pkts=16)
+    spec2 = B.build_spec(topo, other.to_packet_flows(), SPRAY_W,
+                         n_ticks=448, seed=0)
+    with pytest.raises(ValueError, match="identical SimSpec"):
+        E.run(spec2, resume=E.checkpoint(res, st))

@@ -87,6 +87,12 @@ def test_workload_and_failure_builders_known():
             # failure plans are not plumbed through the dual run yet
             assert cell.workload in ("train", "alltoall"), cell.cell_id
             assert cell.failure is None, cell.cell_id
+        elif cell.engine == "openloop":
+            kw = dict(cell.workload_kw)
+            assert kw.get("fidelity", "flow") in ("flow", "packet"), \
+                cell.cell_id
+            assert len(kw.get("loads", (0.3, 0.6, 0.9))) >= 3, cell.cell_id
+            assert cell.failure is None, cell.cell_id
 
 
 # ------------------------------------------------------- schema + hashing
@@ -247,6 +253,60 @@ def test_guard_evaluators():
                           "num": "spritz_spray_w", "den": "ecmp",
                           "op": "<=", "value": 1.0},), rows)
     assert not drift["ok"]
+
+
+def test_guard_sentinel_and_nan_fail_not_skip():
+    """Satellite regression: a scheme that RAN but whose metric column
+    is the -1.0 empty-stats sentinel (or NaN) must FAIL ratio and
+    baseline_schemes guards — the old behaviour silently passed."""
+    from repro.exp.guards import evaluate
+    rows = [{"scheme": "ecmp", "seed": 0, "fct_p99_us": 100.0,
+             "fct_ratio_vs_ecmp": 1.0},
+            {"scheme": "spritz_spray_w", "seed": 0, "fct_p99_us": -1.0,
+             "fct_ratio_vs_ecmp": -1.0}]
+    ratio = {"kind": "ratio", "metric": "fct_p99_us",
+             "num": "spritz_spray_w", "den": "ecmp", "op": "<=",
+             "value": 1.0}
+    (g,) = evaluate((ratio,), rows)
+    assert not g["ok"] and "sentinel" in g["note"]
+    (g,) = evaluate((dict(ratio, metric="nan_metric"),),
+                    [dict(r, nan_metric=float("nan")) for r in rows])
+    assert not g["ok"]
+    bs = {"kind": "baseline_schemes", "file": "BENCH_fabric.json",
+          "path": "quick_cells.dragonfly1056.train.schemes",
+          "metric": "fct_ratio_vs_ecmp", "tol": 0.25}
+    (g,) = evaluate((bs,), rows)
+    assert not g["ok"] and "sentinel" in g["note"]
+    # ...but a run where NO row carries the metric at all (e.g. a
+    # --schemes run without the ecmp reference) legitimately skips
+    bare = [{k: v for k, v in r.items() if k != "fct_ratio_vs_ecmp"}
+            for r in rows]
+    (g,) = evaluate((bs,), bare)
+    assert g["ok"] and "skip" in g["note"]
+
+
+def test_guard_where_filter_scopes_rows():
+    """``where`` scopes a guard to matching rows — the load-sweep cells
+    gate one point of the curve (DESIGN.md §15)."""
+    from repro.exp.guards import evaluate
+    rows = [{"scheme": "ecmp", "seed": 0, "load": 0.3, "fct_p99_us": 10.0},
+            {"scheme": "ecmp", "seed": 0, "load": 0.9, "fct_p99_us": 100.0},
+            {"scheme": "spritz_spray_w", "seed": 0, "load": 0.3,
+             "fct_p99_us": 20.0},
+            {"scheme": "spritz_spray_w", "seed": 0, "load": 0.9,
+             "fct_p99_us": 80.0}]
+    g90 = {"kind": "ratio", "metric": "fct_p99_us",
+           "num": "spritz_spray_w", "den": "ecmp", "op": "<=",
+           "value": 1.0, "where": {"load": 0.9}}
+    (a,) = evaluate((g90,), rows)
+    assert a["ok"] and a["value"] == pytest.approx(0.8)
+    assert "load=0.9" in a["desc"]
+    (b,) = evaluate((dict(g90, where={"load": 0.3}),), rows)
+    assert not b["ok"] and b["value"] == pytest.approx(2.0)
+    (c,) = evaluate(({"kind": "counter", "metric": "fct_p99_us",
+                      "op": "<=", "value": 30.0,
+                      "where": {"load": 0.3}},), rows)
+    assert c["ok"] and c["value"] == 20.0
 
 
 def test_baseline_schemes_guard_reads_checked_in_file():

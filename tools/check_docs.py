@@ -1,0 +1,104 @@
+"""Docs consistency gate (CI: ci.yml `docs-check`).
+
+Three checks, all cheap and dependency-light:
+
+1. Markdown link targets in README.md / DESIGN.md / EXPERIMENTS.md
+   resolve to files that exist in the repo.
+2. Every ``DESIGN.md §N`` citation — in docs *and* in source/tests,
+   where section numbers are load-bearing — names a section that
+   actually exists in DESIGN.md.
+3. EXPERIMENTS.md's generated marker block is regeneration-clean:
+   ``python -m repro.exp tables`` against the current matrix would be a
+   no-op.  (Requires repro importable; run with ``PYTHONPATH=src``.
+   ``--skip-tables`` omits this check for dependency-free contexts —
+   CI's lint job runs the stdlib-only half there.)
+
+Exit non-zero with a per-failure listing on any miss.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+DOCS = ("README.md", "DESIGN.md", "EXPERIMENTS.md", "RESULTS.md",
+        "ROADMAP.md", "CHANGES.md")
+
+_LINK = re.compile(r"\[[^\]]+\]\(([^)#]+)(#[^)]*)?\)")
+_SECTION_REF = re.compile(r"DESIGN\.md §(\d+)")
+_SECTION_DEF = re.compile(r"^## §(\d+)\b", re.M)
+
+
+def check_links(errors: list[str]) -> None:
+    for doc in ("README.md", "DESIGN.md", "EXPERIMENTS.md"):
+        path = ROOT / doc
+        if not path.exists():
+            errors.append(f"{doc}: file missing")
+            continue
+        for m in _LINK.finditer(path.read_text()):
+            target = m.group(1).strip()
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if not (path.parent / target).exists():
+                errors.append(f"{doc}: broken link -> {target}")
+
+
+def check_section_refs(errors: list[str]) -> None:
+    design = ROOT / "DESIGN.md"
+    defined = set(_SECTION_DEF.findall(design.read_text()))
+    sources = [ROOT / d for d in DOCS if (ROOT / d).exists()]
+    for sub in ("src", "tests", "benchmarks", "tools"):
+        sources += sorted((ROOT / sub).rglob("*.py"))
+    for path in sources:
+        for n in _SECTION_REF.findall(path.read_text()):
+            if n not in defined:
+                errors.append(f"{path.relative_to(ROOT)}: cites "
+                              f"DESIGN.md §{n}, which does not exist")
+
+
+def check_experiments_block(errors: list[str]) -> None:
+    try:
+        from repro.exp import report
+    except ImportError as e:
+        errors.append(f"cannot import repro.exp (run with PYTHONPATH=src): {e}")
+        return
+    path = ROOT / "EXPERIMENTS.md"
+    text = path.read_text()
+    if report.MARK_BEGIN not in text or report.MARK_END not in text:
+        errors.append("EXPERIMENTS.md: generated marker block missing")
+        return
+    import shutil
+    import tempfile
+    with tempfile.NamedTemporaryFile("w", suffix=".md", delete=False) as tmp:
+        tmp_path = Path(tmp.name)
+    try:
+        shutil.copyfile(path, tmp_path)
+        if report.update_experiments_md(tmp_path):
+            errors.append("EXPERIMENTS.md: stale generated block — run "
+                          "`PYTHONPATH=src python -m repro.exp tables`")
+    finally:
+        tmp_path.unlink(missing_ok=True)
+
+
+def main(argv: list[str]) -> int:
+    skip_tables = "--skip-tables" in argv
+    errors: list[str] = []
+    check_links(errors)
+    check_section_refs(errors)
+    if not skip_tables:
+        check_experiments_block(errors)
+    if errors:
+        for e in errors:
+            print(f"docs-check: {e}", file=sys.stderr)
+        return 1
+    n_docs = sum((ROOT / d).exists() for d in DOCS)
+    what = "links + §-refs" + ("" if skip_tables
+                               else " + EXPERIMENTS.md block clean")
+    print(f"docs-check: OK ({n_docs} docs, {what})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
